@@ -1,0 +1,9 @@
+"""Benchmark harness: one module per paper table/figure (see DESIGN.md §6).
+
+Run everything:      PYTHONPATH=src python -m benchmarks.run
+Run one:             PYTHONPATH=src python -m benchmarks.run --only env,fingerprint
+Scale up:            PYTHONPATH=src python -m benchmarks.run --scale full
+
+Each benchmark prints ``name,value,unit[,derived]`` CSV rows and the runner
+writes the aggregate to experiments/bench/results.json.
+"""

@@ -1,0 +1,46 @@
+"""§3.6 LRU property cache: hit rate + effective speedup during RL-style
+re-visitation (episodes restart from the same initial molecules)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, services
+from repro.predictors import PropertyService
+from repro.predictors.cache import LRUCache
+
+
+def run(scale: str = "quick") -> None:
+    service, train, _, _, metrics = services()
+    emit("predictor.bde_rel_err", round(metrics["bde"]["rel_err_mean"], 4), "frac",
+         "paper §2.2: <5%")
+    emit("predictor.ip_rel_err", round(metrics["ip"]["rel_err_mean"], 4), "frac")
+
+    mols = train[:64]
+    rng = np.random.default_rng(0)
+
+    # simulate episode revisitation: 6 passes with small perturbation of order
+    cold = PropertyService(service.bde_model, service.bde_params,
+                           service.ip_model, service.ip_params, cache=None)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        order = rng.permutation(len(mols))
+        cold.predict([mols[i] for i in order])
+    t_cold = time.perf_counter() - t0
+
+    warm = PropertyService(service.bde_model, service.bde_params,
+                           service.ip_model, service.ip_params,
+                           cache=LRUCache(100_000))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        order = rng.permutation(len(mols))
+        warm.predict([mols[i] for i in order])
+    t_warm = time.perf_counter() - t0
+
+    emit("cache.no_cache_s", round(t_cold, 3), "s", "3 passes x 64 molecules")
+    emit("cache.with_cache_s", round(t_warm, 3), "s")
+    emit("cache.speedup", round(t_cold / t_warm, 2), "x")
+    emit("cache.hit_rate", round(warm.cache.hit_rate, 3), "frac",
+         "paper: cache turns 16 days into ~1 hour end-to-end")

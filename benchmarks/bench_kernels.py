@@ -1,0 +1,76 @@
+"""Kernel-level bench: fused_qnet vs the unfused XLA path (the per-step Q
+evaluation over all candidates — the paper's §3.6 hot loop), plus
+interpret-mode correctness spot checks for all three kernels.
+
+Wall-clock on CPU measures the XLA path only (the Pallas kernels run in
+interpret mode here — Python emulation, not a performance path);
+the kernel's VMEM-resident benefit is a roofline argument recorded in
+EXPERIMENTS.md §Perf."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.agent import QNetwork
+
+
+def run(scale: str = "quick") -> None:
+    net = QNetwork()
+    params = net.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    n = 1024  # ~ 8 molecules x ~128 candidates
+    x = jnp.asarray((rng.random((n, 2049)) > 0.8).astype(np.float32))
+
+    apply_fn = jax.jit(net.apply)
+    apply_fn(params, x).block_until_ready()
+    reps = 20 if scale == "quick" else 100
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        apply_fn(params, x).block_until_ready()
+    xla = (time.perf_counter() - t0) / reps
+    emit("qnet.xla_path", round(xla * 1e6), "us_per_batch", f"{n} candidates")
+
+    # roofline napkin math for the fused kernel on TPU v5e
+    pbytes = sum(l["w"].size + l["b"].size for l in params["layers"]) * 4
+    flops = 2 * n * sum(l["w"].size for l in params["layers"])
+    t_unfused = 5 * pbytes / 819e9 + flops / 197e12   # 5 weight reads (per-layer)
+    t_fused = pbytes / 819e9 + flops / 197e12          # 1 weight read
+    emit("qnet.v5e_unfused_roofline", round(t_unfused * 1e6, 1), "us_per_batch")
+    emit("qnet.v5e_fused_roofline", round(t_fused * 1e6, 1), "us_per_batch",
+         f"kernel keeps {pbytes/2**20:.1f} MiB of weights VMEM-resident")
+
+    # correctness spot checks (interpret mode)
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.fused_qnet.ops import fused_qnet
+    from repro.kernels.fused_qnet.ref import qnet_ref
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    q = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    err_fa = float(jnp.abs(
+        flash_attention(q, k, v, causal=True)
+        - attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    ).max())
+    emit("kernel.flash_attention_max_err", f"{err_fa:.2e}", "abs")
+
+    xs = jnp.asarray(rng.standard_normal((1, 256, 2, 32)) * 0.5, jnp.float32)
+    dts = jnp.asarray(np.abs(rng.standard_normal((1, 256, 2))) * 0.1 + 0.01, jnp.float32)
+    As = jnp.asarray(np.abs(rng.standard_normal(2)) + 0.5, jnp.float32)
+    Bs = jnp.asarray(rng.standard_normal((1, 256, 1, 16)) * 0.3, jnp.float32)
+    Cs = jnp.asarray(rng.standard_normal((1, 256, 1, 16)) * 0.3, jnp.float32)
+    yk, _ = ssd_scan(xs, dts, As, Bs, Cs, chunk=64)
+    yr, _ = ssd_ref(xs, dts, As, Bs, Cs)
+    emit("kernel.ssd_scan_max_err", f"{float(jnp.abs(yk - yr).max()):.2e}", "abs")
+
+    qk = fused_qnet(params, x[:256])
+    qr = qnet_ref(x[:256], [(l["w"], l["b"]) for l in params["layers"]])
+    emit("kernel.fused_qnet_max_err", f"{float(jnp.abs(qk - qr).max()):.2e}", "abs")

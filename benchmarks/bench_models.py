@@ -1,0 +1,153 @@
+"""Table 1 + Figs 2/3/4 (+ Fig 9-right): the four training regimes.
+
+    Individual  1 molecule/model  (MolDQN)        -> N models
+    Parallel    8 molecules/model (MT-MolDQN)     -> N/8 models
+    General     all molecules, W workers, episode sync (DA-MolDQN)
+    Fine-Tuned  general + per-molecule fine-tuning (§3.5)
+
+All regimes share the environment, predictors and Q-net topology; episode
+counts are CPU-scaled (paper: 8000/8000/250/200) with the paper's ratios
+kept qualitative: the general model must (a) cost a fraction of
+individual/parallel at equal molecule coverage [Fig 3], (b) reach lower
+OFR / higher reward [Fig 2], and (c) transfer to unseen molecules where
+individual models cannot [Fig 4].
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, services
+from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
+from repro.core.agent import QNetwork
+from repro.core.distributed import (DistributedTrainer, greedy_optimize,
+                                    optimization_failure_rate)
+from repro.core.finetune import fine_tune
+
+NET = QNetwork(hidden=(512, 128, 32))
+ENV = EnvConfig(max_steps=5)
+
+
+def _mean_reward(recs):
+    return float(np.mean([r.reward for r in recs])) if recs else float("nan")
+
+
+def _train_one(mols, *, workers, episodes, eps_decay, seed, service, rcfg,
+               sync="episode"):
+    cfg = TrainerConfig(
+        n_workers=workers, mols_per_worker=len(mols) // workers,
+        episodes=episodes, sync_mode=sync, train_batch_size=32,
+        max_candidates=48, updates_per_episode=6,
+        dqn=DQNConfig(epsilon_decay=eps_decay), env=ENV, seed=seed)
+    tr = DistributedTrainer(cfg, mols, service, rcfg, network=NET)
+    stats = tr.train()
+    return tr, stats
+
+
+def run(scale: str = "quick") -> None:
+    service, train, test, rcfg, _ = services()
+    N = 8 if scale == "quick" else 16
+    ep_ind = 30 if scale == "quick" else 60
+    ep_gen = 30 if scale == "quick" else 60
+    ep_ft = 10 if scale == "quick" else 20
+    mols = train[:N]
+    test_mols = test[: max(N // 2, 4)]
+
+    results = {}
+
+    # ---- Individual: one model per molecule ------------------------- #
+    t0 = time.perf_counter()
+    ind_agents = []
+    for i, m in enumerate(mols):
+        tr, _ = _train_one([m], workers=1, episodes=ep_ind, eps_decay=0.9,
+                           seed=100 + i, service=service, rcfg=rcfg)
+        ind_agents.append(tr.as_agent(0.0))
+    t_ind = time.perf_counter() - t0
+    recs = [greedy_optimize(a, [m], service, rcfg, ENV, seed=7)[-1]
+            for a, m in zip(ind_agents, mols)]
+    results["individual"] = (t_ind, t_ind / N, _mean_reward(recs),
+                             optimization_failure_rate(recs))
+
+    # ---- Parallel: 8 molecules per model (one worker) ---------------- #
+    t0 = time.perf_counter()
+    par_agents = []
+    groups = [mols[i : i + 8] for i in range(0, N, 8)]
+    for gi, g in enumerate(groups):
+        tr, _ = _train_one(g, workers=1, episodes=ep_ind, eps_decay=0.9,
+                           seed=200 + gi, service=service, rcfg=rcfg)
+        par_agents.append((tr.as_agent(0.0), g))
+    t_par = time.perf_counter() - t0
+    recs = [r for a, g in par_agents
+            for r in _final(greedy_optimize(a, g, service, rcfg, ENV, seed=8))]
+    results["parallel"] = (t_par, t_par / len(groups), _mean_reward(recs),
+                           optimization_failure_rate(recs))
+
+    # ---- General: all molecules, 4 workers, episode sync ------------- #
+    t0 = time.perf_counter()
+    gen_tr, gen_stats = _train_one(mols, workers=4, episodes=ep_gen,
+                                   eps_decay=0.88, seed=300,
+                                   service=service, rcfg=rcfg)
+    t_gen = time.perf_counter() - t0
+    gen_agent = gen_tr.as_agent(0.0)
+    recs = _final(greedy_optimize(gen_agent, mols, service, rcfg, ENV, seed=9))
+    results["general"] = (t_gen, t_gen, _mean_reward(recs),
+                          optimization_failure_rate(recs))
+
+    # Fig 9-right: invalid-conformer avoidance during general training
+    inv = [s["invalid_conformer_rate"] for s in gen_stats]
+    emit("fig9.invalid_rate_first3", round(float(np.mean(inv[:3])), 3), "frac")
+    emit("fig9.invalid_rate_last3", round(float(np.mean(inv[-3:])), 3), "frac",
+         "agent learns to avoid invalid 3D conformers (§3.3)")
+
+    # ---- Fine-Tuned: general + per-molecule episodes ----------------- #
+    t0 = time.perf_counter()
+    ft_recs = []
+    for i, m in enumerate(mols[: max(N // 2, 4)]):
+        ag = fine_tune(gen_agent, m, service, rcfg, episodes=ep_ft,
+                       env_cfg=ENV, train_batch_size=16, max_candidates=32,
+                       updates_per_episode=2, seed=400 + i)
+        ft_recs.extend(_final(greedy_optimize(ag, [m], service, rcfg, ENV, seed=10)))
+    t_ft = time.perf_counter() - t0
+    results["fine_tuned"] = (t_gen + t_ft, t_ft / max(N // 2, 4),
+                             _mean_reward(ft_recs),
+                             optimization_failure_rate(ft_recs))
+
+    for name, (total, per_model, rew, ofr) in results.items():
+        emit(f"table1.{name}.total_s", round(total, 1), "s")
+        emit(f"table1.{name}.per_model_s", round(per_model, 1), "s")
+        emit(f"fig2.{name}.mean_reward", round(rew, 3), "reward")
+        emit(f"fig2.{name}.ofr", round(ofr, 3), "frac")
+
+    emit("fig3.general_speedup_vs_individual",
+         round(results["individual"][0] / results["general"][0], 2), "x",
+         "paper: 28.1x at equal coverage (8000-ep individual vs 250-ep general)")
+    emit("fig3.general_speedup_vs_parallel",
+         round(results["parallel"][0] / results["general"][0], 2), "x",
+         "paper: 106x")
+
+    # ---- Fig 4: unseen molecules -------------------------------------- #
+    recs_gen = _final(greedy_optimize(gen_agent, test_mols, service, rcfg, ENV, seed=11))
+    recs_ind = _final(greedy_optimize(ind_agents[0], test_mols, service, rcfg, ENV, seed=12))
+    ft_unseen = []
+    for i, m in enumerate(test_mols):
+        ag = fine_tune(gen_agent, m, service, rcfg, episodes=ep_ft, env_cfg=ENV,
+                       train_batch_size=16, max_candidates=32,
+                       updates_per_episode=2, seed=500 + i)
+        ft_unseen.extend(_final(greedy_optimize(ag, [m], service, rcfg, ENV, seed=13)))
+    emit("fig4.general.unseen_reward", round(_mean_reward(recs_gen), 3), "reward")
+    emit("fig4.general.unseen_ofr", round(optimization_failure_rate(recs_gen), 3), "frac")
+    emit("fig4.individual.unseen_reward", round(_mean_reward(recs_ind), 3), "reward",
+         "an individual model applied to molecules it never saw")
+    emit("fig4.fine_tuned.unseen_reward", round(_mean_reward(ft_unseen), 3), "reward")
+    emit("fig4.fine_tuned.unseen_ofr", round(optimization_failure_rate(ft_unseen), 3), "frac")
+
+    # stash artifacts for bench_properties / bench_dft
+    run.artifacts = {"gen_agent": gen_agent, "mols": mols, "test": test_mols,
+                     "service": service, "rcfg": rcfg, "env": ENV}
+
+
+def _final(recs):
+    done = [r for r in recs if r.done]
+    return done if done else recs

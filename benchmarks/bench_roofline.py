@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and fits-in-HBM.  Writes the markdown
+table EXPERIMENTS.md §Roofline embeds."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+        "dominant", "useful_flops_ratio", "hbm_gb_per_chip", "fits_16gb")
+
+
+def load(dryrun_dir: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") == "ok":
+            rows.append(d)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | dominant | useful FLOPs | HBM GiB | fits |"
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['hbm_gb_per_chip']:.2f} | {'Y' if r.get('fits_16gb') else 'N'} |")
+    return "\n".join(lines)
+
+
+def run(scale: str = "quick") -> None:
+    rows = load()
+    if not rows:
+        emit("roofline.rows", 0, "configs", "run repro.launch.dryrun --all first")
+        return
+    emit("roofline.rows", len(rows), "configs")
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    by_dom = {}
+    for r in single:
+        by_dom.setdefault(r["dominant"], []).append(f"{r['arch']}x{r['shape']}")
+    for dom, names in sorted(by_dom.items()):
+        emit(f"roofline.dominant.{dom}", len(names), "configs", ";".join(names[:4]) + "...")
+    worst = max(single, key=lambda r: (max(r["compute_s"], r["memory_s"], r["collective_s"])
+                                       / max(r["compute_s"], 1e-12)))
+    emit("roofline.worst_fraction", f"{worst['arch']}x{worst['shape']}", "pair",
+         f"dominant={worst['dominant']}")
+    most_coll = max(single, key=lambda r: r["collective_s"])
+    emit("roofline.most_collective_bound", f"{most_coll['arch']}x{most_coll['shape']}",
+         "pair", f"{most_coll['collective_s']:.1f}s")
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_table.md", "w") as f:
+        f.write(markdown_table(rows) + "\n")
+    emit("roofline.table", "experiments/roofline_table.md", "path")

@@ -1,0 +1,69 @@
+"""The paper's distributed-training claim in collective-bytes form.
+
+DA-MolDQN replaces DDP's per-step gradient all-reduce with a per-episode
+parameter sync (§3.2).  This bench lowers both jit'd update paths of the
+actual trainer and walks the partitioned HLO: collective bytes per EPISODE
+under each mode (updates_per_episode x grad-allreduce vs 1 x param-sync).
+Also times a real CPU episode under both modes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, services
+from repro.core import DQNConfig, EnvConfig, TrainerConfig
+from repro.core.agent import QNetwork
+from repro.core.distributed import DistributedTrainer
+from repro.roofline.hlo_walk import aggregate
+
+
+def _collective_bytes(jitted, *args) -> float:
+    lowered = jitted.lower(*args)
+    return aggregate(lowered.compile().as_text())["collective_bytes"]
+
+
+def run(scale: str = "quick") -> None:
+    service, train, _, rcfg, _ = services()
+    updates = 4
+
+    def build(sync):
+        cfg = TrainerConfig(
+            n_workers=2, mols_per_worker=2, episodes=2, sync_mode=sync,
+            updates_per_episode=updates, train_batch_size=16,
+            max_candidates=32, dqn=DQNConfig(epsilon_decay=0.9),
+            env=EnvConfig(max_steps=4), seed=0)
+        return DistributedTrainer(cfg, train[:4], service, rcfg,
+                                  network=QNetwork(hidden=(512, 128, 32)))
+
+    tr = build("step")
+    for w, env in enumerate(tr.envs):
+        env.run_episode(tr._views[w], service, rcfg, tr.buffers[w])
+    batch = tr._stacked_sample()
+
+    ddp_bytes = _collective_bytes(tr._ddp_update, tr.params, tr.target_params,
+                                  tr.opt_state, batch)
+    local_bytes = _collective_bytes(tr._local_update, tr.params, tr.target_params,
+                                    tr.opt_state, batch)
+    sync_bytes = _collective_bytes(tr._sync, tr.params)
+
+    per_episode_ddp = updates * ddp_bytes
+    per_episode_paper = updates * local_bytes + sync_bytes
+    emit("sync.ddp_bytes_per_episode", int(per_episode_ddp), "B",
+         f"{updates} grad all-reduces")
+    emit("sync.episode_bytes_per_episode", int(per_episode_paper), "B",
+         "local updates + ONE param pmean (the paper's §3.2 schedule)")
+    if per_episode_paper > 0:
+        emit("sync.traffic_ratio", round(per_episode_ddp / per_episode_paper, 2),
+             "x", "collective-term reduction of episode-boundary sync")
+
+    # wall-clock per episode, both modes (CPU, 1 device: measures overheads)
+    for mode in ("step", "episode"):
+        t = build(mode)
+        t.train_episode()  # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(2):
+            t.train_episode()
+        emit(f"sync.{mode}_episode_wall_s", round((time.perf_counter() - t0) / 2, 2), "s")

@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from contextlib import contextmanager
+
+RESULTS: dict[str, dict] = {}
+
+
+def emit(name: str, value, unit: str, derived: str = "") -> None:
+    RESULTS[name] = {"value": value, "unit": unit, "derived": derived}
+    print(f"{name},{value},{unit}" + (f",{derived}" if derived else ""), flush=True)
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def save_results(path: str = "experiments/bench/results.json") -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(RESULTS, f, indent=2, default=str)
+
+
+def services():
+    """Shared predictor service + dataset + reward config."""
+    from repro.core import RewardConfig
+    from repro.data.datasets import antioxidant_dataset, dataset_property_table, \
+        train_test_split
+    from repro.predictors import PropertyService
+    from repro.predictors.training import ensure_trained
+
+    bm, bp, im, ip_, metrics = ensure_trained(verbose=False)
+    service = PropertyService(bm, bp, im, ip_)
+    ds = antioxidant_dataset(600)
+    train, test = train_test_split(ds)
+    props = dataset_property_table(train)
+    rcfg = RewardConfig.from_dataset(props["bde"], props["ip"])
+    return service, train, test, rcfg, metrics

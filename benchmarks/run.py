@@ -1,0 +1,47 @@
+"""Benchmark runner: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run                 # everything, quick
+    PYTHONPATH=src python -m benchmarks.run --only env,cache
+    PYTHONPATH=src python -m benchmarks.run --scale full
+
+Prints ``name,value,unit[,derived]`` CSV; writes experiments/bench/results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks.common import RESULTS, emit, save_results
+
+BENCHES = ("env", "fingerprint", "cache", "models", "properties",
+           "qed_plogp", "sync_modes", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of bench names")
+    ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(BENCHES)
+    t0 = time.time()
+    failures = []
+    for name in names:
+        print(f"\n# --- bench: {name} ({args.scale}) ---", flush=True)
+        try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+            mod.run(args.scale)
+        except Exception as e:  # noqa: BLE001 -- report, continue
+            traceback.print_exc()
+            failures.append(name)
+            emit(f"{name}.FAILED", str(e)[:120], "error")
+    emit("bench.total_wall", round(time.time() - t0, 1), "s")
+    save_results()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Pytree checkpointing (npz-based, no external deps)."""
+
+from repro.checkpoint.checkpoint import save_pytree, load_pytree, CheckpointManager
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]

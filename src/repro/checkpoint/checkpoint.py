@@ -1,0 +1,115 @@
+"""Checkpointing: arbitrary pytrees <-> a single ``.npz`` + JSON treedef.
+
+Leaves are gathered to host (works for sharded arrays — callers on a real
+cluster should checkpoint per-host shards; for this framework's scales a
+single-file gather is the right call).  The tree structure is encoded as
+flattened key paths so checkpoints are stable across python versions and
+don't pickle code.
+
+``CheckpointManager`` adds step-numbered rotation + a LATEST pointer, which
+``launch/train.py`` and the RL trainer use for resumable episodes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_element_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_element_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    """Save a pytree to ``path`` (.npz).  Atomic via temp-file rename."""
+    flat = _flatten_with_paths(tree)
+    manifest = np.frombuffer(json.dumps(sorted(flat)).encode(), dtype=np.uint8)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __manifest__=manifest, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Load a pytree saved by :func:`save_pytree` into the structure of
+    ``like`` (shape/dtype validated leaf-by-leaf)."""
+    data = np.load(path)
+    flat_like = _flatten_with_paths(like)
+    out = {}
+    for key, ref in flat_like.items():
+        if key not in data:
+            raise KeyError(f"checkpoint {path} missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {key!r}: checkpoint shape {arr.shape} != {ref.shape}")
+        out[key] = arr.astype(ref.dtype)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for path_elems, _ in leaves_paths:
+        key = _SEP.join(_path_element_str(p) for p in path_elems)
+        new_leaves.append(out[key])
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with rotation: ``<dir>/ckpt_<step>.npz``."""
+
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.directory = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _steps(self) -> list[int]:
+        steps = []
+        for f in os.listdir(self.directory):
+            m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def save(self, step: int, tree: PyTree) -> str:
+        path = os.path.join(self.directory, f"ckpt_{step}.npz")
+        save_pytree(path, tree)
+        for old in self._steps()[: -self.max_to_keep]:
+            os.unlink(os.path.join(self.directory, f"ckpt_{old}.npz"))
+        return path
+
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: PyTree, step: int | None = None) -> tuple[int, PyTree]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"ckpt_{step}.npz")
+        return step, load_pytree(path, like)

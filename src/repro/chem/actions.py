@@ -1,0 +1,238 @@
+"""MolDQN action enumeration with the paper's O-H-bond protection (§3.3).
+
+One environment step enumerates every *valid* single edit of the current
+molecule:
+
+* **atom addition** — attach a new C/N/O atom to any atom with free valence,
+  with bond order 1..min(free valence, new-atom valence);
+* **bond addition / order increase** — between two existing atoms with
+  sufficient free valence; closing a new ring is only allowed for ring sizes
+  in ``ALLOWED_RING_SIZES`` (3/5/6, paper App. C);
+* **bond order decrease / removal** — decrease by 1..order; if the molecule
+  falls apart, disconnected atoms are dropped (largest fragment kept,
+  paper Fig. 6);
+* **no-op** — keep the current molecule (lets the agent "stop early").
+
+Protection (§3.3): every candidate that has *no remaining O-H bond* is
+discarded, because BDE (min over O-H bonds) would be undefined.  The paper
+notes this removes only a few of >100 candidates.
+
+Two implementations are provided:
+
+``enumerate_actions``        vectorised NumPy (the production path — the
+                             analogue of the paper's C++ port, §3.6);
+``enumerate_actions_naive``  a deliberately line-by-line port of the
+                             original Python loop structure, kept as the
+                             baseline for ``benchmarks/bench_env.py``.
+
+Both return identical action sets (asserted by tests/property tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import numpy as np
+
+from repro.chem.molecule import (
+    ALLOWED_RING_SIZES,
+    ELEMENTS,
+    MAX_BOND_ORDER,
+    VALENCES,
+    Molecule,
+)
+
+ActionKind = Literal["no_op", "add_atom", "bond_delta"]
+
+
+@dataclass(frozen=True)
+class Action:
+    """A molecule edit.  ``result`` is the post-edit molecule."""
+
+    kind: ActionKind
+    result: Molecule
+    # add_atom: (element_symbol, anchor, order); bond_delta: (i, j, delta)
+    detail: tuple = ()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Action({self.kind}, {self.detail}, -> {self.result.heavy_formula()})"
+
+
+def enumerate_actions(
+    mol: Molecule,
+    *,
+    allow_removal: bool = True,
+    allow_no_op: bool = True,
+    protect_oh: bool = True,
+    allowed_ring_sizes: frozenset[int] = ALLOWED_RING_SIZES,
+    max_atoms: int = 38,
+) -> list[Action]:
+    """Vectorised enumeration of all valid single-edit actions."""
+    actions: list[Action] = []
+    if allow_no_op:
+        actions.append(Action("no_op", mol, ()))
+
+    n = mol.num_atoms
+    if n == 0:
+        for sym in ELEMENTS:
+            actions.append(Action("add_atom", Molecule.from_element(sym), (sym, -1, 0)))
+        return _protect(actions, protect_oh)
+
+    fv = mol.free_valences()
+
+    # ---- atom additions (vectorised over anchors) ----------------------- #
+    if n < max_atoms:
+        anchors = np.nonzero(fv >= 1)[0]
+        for a in anchors:
+            a = int(a)
+            for ei, sym in enumerate(ELEMENTS):
+                max_order = min(int(fv[a]), VALENCES[ei], MAX_BOND_ORDER)
+                for order in range(1, max_order + 1):
+                    actions.append(
+                        Action("add_atom", mol.with_added_atom(sym, a, order), (sym, a, order))
+                    )
+
+    # ---- bond additions / increases -------------------------------------- #
+    # Candidate pairs where both ends have free valence.  For unbonded pairs
+    # we must respect the ring-size rule; for already-bonded pairs an order
+    # increase never creates a new ring.
+    cap = np.minimum.outer(fv, fv)          # max possible delta per pair
+    iu, ju = np.triu_indices(n, k=1)
+    sp = None
+    for i, j in zip(iu.tolist(), ju.tolist()):
+        max_delta = int(min(cap[i, j], MAX_BOND_ORDER - int(mol.bonds[i, j])))
+        if max_delta < 1:
+            continue
+        if mol.bonds[i, j] == 0:
+            # would close a ring iff i..j already connected
+            if sp is None:
+                sp = mol.all_pairs_shortest_paths()
+            d = int(sp[i, j])
+            if d >= 0 and (d + 1) not in allowed_ring_sizes:
+                continue
+        for delta in range(1, max_delta + 1):
+            actions.append(Action("bond_delta", mol.with_bond_delta(i, j, delta), (i, j, delta)))
+
+    # ---- bond decreases / removals ---------------------------------------- #
+    if allow_removal:
+        for i, j in zip(*np.nonzero(np.triu(mol.bonds))):
+            i, j = int(i), int(j)
+            order = int(mol.bonds[i, j])
+            for delta in range(1, order + 1):
+                cand = mol.with_bond_delta(i, j, -delta).largest_fragment()
+                if cand.num_atoms == 0:
+                    continue
+                actions.append(Action("bond_delta", cand, (i, j, -delta)))
+
+    return _protect(_dedup(actions), protect_oh)
+
+
+def enumerate_actions_naive(
+    mol: Molecule,
+    *,
+    allow_removal: bool = True,
+    allow_no_op: bool = True,
+    protect_oh: bool = True,
+    allowed_ring_sizes: frozenset[int] = ALLOWED_RING_SIZES,
+    max_atoms: int = 38,
+) -> list[Action]:
+    """Line-by-line port of the original Python MolDQN enumeration.
+
+    Intentionally unoptimised: per-pair BFS, per-candidate full validity
+    re-checks, no vectorisation.  Kept as the performance baseline that the
+    paper's C++ port (and our vectorised path) is measured against.
+    """
+    actions: list[Action] = []
+    if allow_no_op:
+        actions.append(Action("no_op", mol, ()))
+    if mol.num_atoms == 0:
+        for sym in ELEMENTS:
+            actions.append(Action("add_atom", Molecule.from_element(sym), (sym, -1, 0)))
+        return _protect(actions, protect_oh)
+
+    # atom additions -- python loops, recomputing free valence every time
+    if mol.num_atoms < max_atoms:
+        for a in range(mol.num_atoms):
+            for ei, sym in enumerate(ELEMENTS):
+                for order in range(1, MAX_BOND_ORDER + 1):
+                    if order > VALENCES[ei]:
+                        continue
+                    if mol.free_valence(a) < order:  # recomputed per candidate
+                        continue
+                    cand = mol.with_added_atom(sym, a, order)
+                    cand.check_valences()
+                    actions.append(Action("add_atom", cand, (sym, a, order)))
+
+    # bond additions -- per-pair BFS instead of one all-pairs pass
+    for i in range(mol.num_atoms):
+        for j in range(i + 1, mol.num_atoms):
+            for delta in range(1, MAX_BOND_ORDER + 1):
+                if mol.free_valence(i) < delta or mol.free_valence(j) < delta:
+                    continue
+                if int(mol.bonds[i, j]) + delta > MAX_BOND_ORDER:
+                    continue
+                if mol.bonds[i, j] == 0:
+                    d = mol.shortest_path_length(i, j)
+                    if d >= 0 and (d + 1) not in allowed_ring_sizes:
+                        continue
+                cand = mol.with_bond_delta(i, j, delta)
+                cand.check_valences()
+                actions.append(Action("bond_delta", cand, (i, j, delta)))
+
+    # bond removals
+    if allow_removal:
+        for i in range(mol.num_atoms):
+            for j in range(i + 1, mol.num_atoms):
+                order = int(mol.bonds[i, j])
+                for delta in range(1, order + 1):
+                    cand = mol.with_bond_delta(i, j, -delta).largest_fragment()
+                    if cand.num_atoms == 0:
+                        continue
+                    cand.check_valences()
+                    actions.append(Action("bond_delta", cand, (i, j, -delta)))
+
+    return _protect(_dedup_naive(actions), protect_oh)
+
+
+def _dedup_naive(actions: list[Action]) -> list[Action]:
+    """Per-candidate canonical-serialisation dedup — the original MolDQN
+    approach (canonical SMILES per candidate via RDKit).  Baseline for
+    ``benchmarks/bench_env.py``; same output set as :func:`_dedup`."""
+    seen: set[str] = set()
+    out: list[Action] = []
+    for a in actions:
+        key = a.result.canonical_key()
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(a)
+    return out
+
+
+def _dedup(actions: list[Action]) -> list[Action]:
+    """Drop actions yielding isomorphic molecules (keep first occurrence).
+
+    Hashes every candidate in ONE padded batch (``iso_hashes_batch``) —
+    equal graphs always collide, distinct graphs collide with ~2^-64
+    probability, which is acceptable for pruning a candidate list.
+    """
+    from repro.chem.molecule import iso_hashes_batch
+
+    keys = iso_hashes_batch([a.result for a in actions])
+    seen: set[int] = set()
+    out: list[Action] = []
+    for a, key in zip(actions, keys):
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(a)
+    return out
+
+
+def _protect(actions: list[Action], protect_oh: bool) -> list[Action]:
+    if not protect_oh:
+        return actions
+    kept = [a for a in actions if a.kind == "no_op" or a.result.has_oh_bond()]
+    # Never return an empty action set: no-op always survives if present.
+    return kept if kept else actions[:1]

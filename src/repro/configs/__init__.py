@@ -1,0 +1,29 @@
+"""Architecture configs.
+
+One module per assigned architecture (see the assignment table in
+DESIGN.md) plus the paper's own model (``damoldqn``).  ``get_config(name)``
+is the registry the launcher uses; ``--arch <id>`` maps to these names.
+"""
+
+from repro.configs.base import (
+    ArchConfig, MoEConfig, SSMConfig, EncDecConfig, VLMConfig,
+    InputShape, INPUT_SHAPES, get_config, register, list_archs,
+)
+
+# import for registration side effects
+import repro.configs.qwen3_moe_235b_a22b  # noqa: F401
+import repro.configs.zamba2_1p2b          # noqa: F401
+import repro.configs.stablelm_1p6b        # noqa: F401
+import repro.configs.granite_34b          # noqa: F401
+import repro.configs.mamba2_2p7b          # noqa: F401
+import repro.configs.yi_34b               # noqa: F401
+import repro.configs.mixtral_8x22b        # noqa: F401
+import repro.configs.whisper_large_v3     # noqa: F401
+import repro.configs.paligemma_3b         # noqa: F401
+import repro.configs.granite_20b          # noqa: F401
+import repro.configs.damoldqn             # noqa: F401
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "EncDecConfig", "VLMConfig",
+    "InputShape", "INPUT_SHAPES", "get_config", "register", "list_archs",
+]

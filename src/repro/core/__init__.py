@@ -1,0 +1,39 @@
+"""DA-MolDQN: the paper's primary contribution.
+
+Distributed deep-Q molecular optimisation with:
+  * batched modification (many molecules per worker, §3.1),
+  * per-worker replay buffers + episode-boundary model sync (§3.2),
+  * O-H-protected action space (§3.3, via repro.chem.actions),
+  * invalid-3D-conformer penalty of -1000 (§3.3),
+  * the normalised BDE/IP/γ reward (§3.4, Eq. 1),
+  * filter script + per-molecule fine-tuning (§3.5),
+  * the §3.6 performance optimisations (vectorised env, incremental
+    fingerprints, LRU property cache) living in repro.chem / repro.predictors.
+
+Layout:
+  reward.py       Eq. 1 + min-max normalisation bounds from the dataset
+  agent.py        Q-network (fingerprint MLP), double-DQN loss, eps-greedy
+  replay.py       bit-packed replay buffer (fingerprints as packed bits)
+  env.py          single + batched molecule environments
+  distributed.py  the distributed trainer (DDP-style per-step pmean and the
+                  paper's episode-boundary sync), shard_map-based
+  finetune.py     §3.5 fine-tuning from the general model
+  filter.py       §3.5 filter script
+"""
+
+from repro.core.reward import RewardConfig, compute_reward, INVALID_CONFORMER_REWARD
+from repro.core.agent import QNetwork, DQNAgent, DQNConfig
+from repro.core.replay import ReplayBuffer, Transition
+from repro.core.env import MoleculeEnv, BatchedEnv, EnvConfig
+from repro.core.distributed import DistributedTrainer, TrainerConfig
+from repro.core.finetune import fine_tune
+from repro.core.filter import filter_molecules, FilterCriteria
+
+__all__ = [
+    "RewardConfig", "compute_reward", "INVALID_CONFORMER_REWARD",
+    "QNetwork", "DQNAgent", "DQNConfig",
+    "ReplayBuffer", "Transition",
+    "MoleculeEnv", "BatchedEnv", "EnvConfig",
+    "DistributedTrainer", "TrainerConfig",
+    "fine_tune", "filter_molecules", "FilterCriteria",
+]

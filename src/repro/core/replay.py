@@ -1,0 +1,89 @@
+"""Replay buffer with bit-packed fingerprints (paper §3.2, size 4000).
+
+Each transition stores the *chosen next state* fingerprint (the Q-network
+input), the reward, terminal flag, and the candidate fingerprints of the
+successor state (needed for the double-DQN max).  At 2048 bits a raw
+float32 layout would cost ~1.2 MB per transition (~150 candidates); packing
+to bits brings it to ~40 KB, which is what makes a 4000-entry buffer per
+worker viable — the same engineering pressure the paper's §3.6 reacts to.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.chem.fingerprint import FP_BITS
+
+
+@dataclass
+class Transition:
+    state_fp: np.ndarray        # packed uint8 [FP_BITS/8]
+    steps_left_frac: float      # steps-left feature of the state
+    reward: float
+    done: bool
+    next_fps: np.ndarray        # packed uint8 [n_candidates, FP_BITS/8]
+    next_steps_left_frac: float
+
+
+def pack_fp(fp: np.ndarray) -> np.ndarray:
+    return np.packbits(fp.astype(bool))
+
+
+def unpack_fp(packed: np.ndarray, n_bits: int = FP_BITS) -> np.ndarray:
+    return np.unpackbits(packed, axis=-1)[..., :n_bits].astype(np.float32)
+
+
+class ReplayBuffer:
+    """Uniform-sampling ring buffer (paper Table 3: size 4000)."""
+
+    def __init__(self, capacity: int = 4000, seed: int = 0):
+        self.capacity = capacity
+        self._items: list[Transition] = []
+        self._pos = 0
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def add(self, t: Transition) -> None:
+        if len(self._items) < self.capacity:
+            self._items.append(t)
+        else:
+            self._items[self._pos] = t
+        self._pos = (self._pos + 1) % self.capacity
+
+    def sample(self, batch_size: int, max_candidates: int = 160) -> dict[str, np.ndarray]:
+        """Returns dense arrays for the jit'd train step.
+
+        states   f32[B, FP_BITS+1]
+        rewards  f32[B]
+        dones    f32[B]
+        next_fps f32[B, C, FP_BITS+1]  (zero-padded)
+        next_mask f32[B, C]
+        """
+        n = len(self._items)
+        if n == 0:
+            raise ValueError("empty replay buffer")
+        idx = self._rng.integers(0, n, size=batch_size)
+        C = max_candidates
+        B = batch_size
+        states = np.zeros((B, FP_BITS + 1), dtype=np.float32)
+        rewards = np.zeros((B,), dtype=np.float32)
+        dones = np.zeros((B,), dtype=np.float32)
+        next_fps = np.zeros((B, C, FP_BITS + 1), dtype=np.float32)
+        next_mask = np.zeros((B, C), dtype=np.float32)
+        for r, i in enumerate(idx):
+            t = self._items[int(i)]
+            states[r, :FP_BITS] = unpack_fp(t.state_fp)
+            states[r, FP_BITS] = t.steps_left_frac
+            rewards[r] = t.reward
+            dones[r] = float(t.done)
+            k = min(t.next_fps.shape[0], C)
+            if k and not t.done:
+                next_fps[r, :k, :FP_BITS] = unpack_fp(t.next_fps[:k])
+                next_fps[r, :k, FP_BITS] = t.next_steps_left_frac
+                next_mask[r, :k] = 1.0
+        return {"states": states, "rewards": rewards, "dones": dones,
+                "next_fps": next_fps, "next_mask": next_mask}

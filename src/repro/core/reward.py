@@ -1,0 +1,83 @@
+"""The normalised reward function (paper §3.4, Eq. 1).
+
+    Reward = -w1 * nBDE + w2 * nIP + w3 * γ
+
+* nBDE/nIP are min-max normalised with bounds taken from the *training
+  dataset* properties ("The lower bound and upper bound are minimal and
+  maximum properties in the proprietary data set").
+* weights default to the paper's (0.8, 0.2, 0.5) — Table 3.
+* γ rewards shrinking the molecule: "the relatively reduced atoms and bonds
+  from the initial molecule".
+* per-property factors (Table 3: BDE Factor 0.9, IP Factor 0.8) are applied
+  as step-decays ``factor ** steps_left`` — early in the episode the agent
+  sees weaker property signal, at the terminal step the full value (this is
+  the MolDQN per-step discounting convention applied per property).
+* molecules without a valid 3D conformer get INVALID_CONFORMER_REWARD
+  (-1000, §3.3) — "much less than the normal rewards".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.chem.molecule import Molecule
+
+INVALID_CONFORMER_REWARD = -1000.0
+
+
+@dataclass(frozen=True)
+class RewardConfig:
+    bde_weight: float = 0.8     # w1
+    ip_weight: float = 0.2      # w2
+    gamma_weight: float = 0.5   # w3
+    bde_factor: float = 0.9
+    ip_factor: float = 0.8
+    # min-max normalisation bounds (from the training set; §3.4)
+    bde_min: float = 55.0
+    bde_max: float = 95.0
+    ip_min: float = 95.0
+    ip_max: float = 200.0
+
+    @classmethod
+    def from_dataset(cls, bde_values, ip_values, **kw) -> "RewardConfig":
+        import numpy as np
+        return cls(
+            bde_min=float(np.min(bde_values)), bde_max=float(np.max(bde_values)),
+            ip_min=float(np.min(ip_values)), ip_max=float(np.max(ip_values)),
+            **kw,
+        )
+
+    # ------------------------------------------------------------ #
+    def normalize_bde(self, bde: float) -> float:
+        return (bde - self.bde_min) / max(self.bde_max - self.bde_min, 1e-9)
+
+    def normalize_ip(self, ip: float) -> float:
+        return (ip - self.ip_min) / max(self.ip_max - self.ip_min, 1e-9)
+
+
+def gamma_term(initial: Molecule, current: Molecule) -> float:
+    """Relative reduction of atoms + bonds vs the initial molecule."""
+    a0 = max(initial.num_atoms, 1)
+    b0 = max(initial.num_bonds, 1)
+    da = (a0 - current.num_atoms) / a0
+    db = (b0 - current.num_bonds) / b0
+    return 0.5 * (da + db)
+
+
+def compute_reward(
+    cfg: RewardConfig,
+    *,
+    bde: float | None,
+    ip: float | None,
+    initial: Molecule,
+    current: Molecule,
+    steps_left: int = 0,
+) -> float:
+    """Eq. 1.  ``ip is None`` means no valid 3D conformer -> -1000 (§3.3).
+    ``bde is None`` (no O-H bond) is unreachable through protected actions
+    but treated identically for robustness."""
+    if ip is None or bde is None:
+        return INVALID_CONFORMER_REWARD
+    nbde = cfg.normalize_bde(bde) * (cfg.bde_factor ** steps_left)
+    nip = cfg.normalize_ip(ip) * (cfg.ip_factor ** steps_left)
+    return -cfg.bde_weight * nbde + cfg.ip_weight * nip + cfg.gamma_weight * gamma_term(initial, current)

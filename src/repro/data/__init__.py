@@ -1,0 +1,15 @@
+"""Datasets, tokenization and input pipelines."""
+
+from repro.data.datasets import (
+    antioxidant_dataset,
+    public_antioxidant_dataset,
+    zinc_like_dataset,
+    train_test_split,
+)
+from repro.data.tokenizer import SmilesTokenizer
+from repro.data.pipeline import TokenBatcher, lm_batches_from_smiles
+
+__all__ = [
+    "antioxidant_dataset", "public_antioxidant_dataset", "zinc_like_dataset",
+    "train_test_split", "SmilesTokenizer", "TokenBatcher", "lm_batches_from_smiles",
+]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>/{<name>.py, ops.py, ref.py}:
+  flash_attention  blocked online-softmax GQA attention (causal / SWA /
+                   prefix-LM) — the prefill/train attention hot spot
+  ssd_scan         Mamba2 SSD chunked scan with VMEM state carry
+  fused_qnet       the paper's DQN MLP fused end-to-end in VMEM (§3.6's
+                   hot-loop optimisation, TPU-idiomatic form)
+
+All are validated against their pure-jnp oracles in interpret mode on CPU
+(tests/test_kernels.py) and are TARGETS for real TPUs — the dry-run
+deliberately lowers the jnp paths so the roofline reads transparent HLO.
+"""

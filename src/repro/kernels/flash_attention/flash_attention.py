@@ -1,0 +1,115 @@
+"""Flash attention (Pallas TPU): blocked online-softmax GQA attention.
+
+TPU adaptation of the flash-attention idea (DESIGN.md §4): the score tensor
+never leaves VMEM.  Grid (batch, q_head, q_blocks, kv_blocks); the last
+grid dim is innermost and sequential on TPU, so the running (max, sum,
+accumulator) state lives in VMEM scratch across kv-block iterations.
+Causal / sliding-window / prefix-LM masks are generated from block indices
+with iota — no [S, S] mask tensor exists anywhere.
+
+Block shapes default to (128, 512): MXU-aligned (multiples of 128 on the
+contracting/lane dims) and small enough that q, k, v blocks + f32
+accumulator fit VMEM at head_dim <= 256.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int | None,
+               prefix_len: int, bq: int, bk: int, nk: int, seq_q: int, seq_k: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [bq, bk]
+
+    qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kj < seq_k
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    if prefix_len > 0:
+        mask = mask | ((kj < prefix_len) & (kj < seq_k))
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # [bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jnp.ndarray,   # [B, H, Sq, D]
+    k: jnp.ndarray,   # [B, K, Sk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    K, Sk = k.shape[1], k.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Sk, bk)
+    scale = D ** -0.5
+    rep = H // K
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        prefix_len=prefix_len, bq=bq, bk=bk, nk=nk, seq_q=Sq, seq_k=Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

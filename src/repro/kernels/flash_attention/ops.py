@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+``flash_attention`` accepts the model-layer layout ([B, S, H, D] /
+[B, S, K, D]) and handles the transposes; on non-TPU backends it runs the
+kernel in interpret mode (Python emulation of the kernel body — the
+correctness path this container validates)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "prefix_len", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,   # [B, Sq, H, D]
+    k: jnp.ndarray,   # [B, Sk, K, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=window, prefix_len=prefix_len, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

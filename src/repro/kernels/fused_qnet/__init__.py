@@ -1,0 +1,3 @@
+from repro.kernels.fused_qnet.ops import fused_qnet
+
+__all__ = ["fused_qnet"]

@@ -1,0 +1,70 @@
+"""Fused DQN Q-network evaluation (Pallas TPU).
+
+The paper's per-step hot loop (§3.1): every environment step evaluates
+Q over ~10^2 candidate-action fingerprints per molecule x the worker's
+modification batch — thousands of rows through the MolDQN MLP
+(2049 -> 1024 -> 512 -> 128 -> 32 -> 1).  The XLA path launches 5 matmul
+kernels with HBM round-trips for each intermediate; this kernel keeps ALL
+weights plus one row-block resident in VMEM and fuses the whole forward:
+
+  VMEM budget (f32): W1 8.0 MiB + W2 2.0 MiB + W3/W4/W5 <0.3 MiB
+                     + x block (128 x 2049) 1.0 MiB + h 0.5 MiB  ~= 12 MiB
+
+Grid = (row blocks,): one pass over HBM for x, one output write — the
+arithmetic-intensity fix for a memory-bound MLP (see EXPERIMENTS.md §Perf).
+Row blocks of 128 keep the MXU M-dim aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _qnet_kernel(x_ref, w1, b1, w2, b2, w3, b3, w4, b4, w5, b5, out_ref):
+    h = x_ref[...].astype(jnp.float32)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w1[...], (((1,), (0,)), ((), ()))) + b1[...], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w2[...], (((1,), (0,)), ((), ()))) + b2[...], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w3[...], (((1,), (0,)), ((), ()))) + b3[...], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w4[...], (((1,), (0,)), ((), ()))) + b4[...], 0.0)
+    q = jax.lax.dot_general(h, w5[...], (((1,), (0,)), ((), ()))) + b5[...]
+    out_ref[...] = q[:, 0].astype(out_ref.dtype)
+
+
+def fused_qnet_rows(
+    x: jnp.ndarray,            # [N, in_dim]
+    weights: list[tuple[jnp.ndarray, jnp.ndarray]],   # [(w, b)] x5
+    *,
+    row_block: int = ROW_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    N, in_dim = x.shape
+    assert len(weights) == 5, "fused kernel is specialised to the MolDQN 5-layer MLP"
+    row_block = min(row_block, N)
+    assert N % row_block == 0, f"rows {N} % block {row_block}"
+    grid = (N // row_block,)
+
+    full = lambda w: pl.BlockSpec(w.shape, lambda i: (0,) * w.ndim)
+    in_specs = [pl.BlockSpec((row_block, in_dim), lambda i: (i, 0))]
+    flat_w = []
+    for w, b in weights:
+        in_specs += [full(w), full(b)]
+        flat_w += [w, b]
+
+    return pl.pallas_call(
+        _qnet_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), x.dtype),
+        interpret=interpret,
+    )(x, *flat_w)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: the QNetwork forward from repro.core.agent."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qnet_ref(x: jnp.ndarray, weights: list[tuple[jnp.ndarray, jnp.ndarray]]) -> jnp.ndarray:
+    h = x.astype(jnp.float32)
+    for li, (w, b) in enumerate(weights):
+        h = h @ w + b
+        if li < len(weights) - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0].astype(x.dtype)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the SSD-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_blhp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,    # [B, L, H, P]
+    dt: jnp.ndarray,   # [B, L, H]
+    A: jnp.ndarray,    # [H]
+    B_: jnp.ndarray,   # [B, L, G, N]
+    C_: jnp.ndarray,   # [B, L, G, N]
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return ssd_scan_blhp(x, dt, A, B_, C_, chunk=chunk, interpret=interpret)

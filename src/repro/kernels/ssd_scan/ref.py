@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the SSD-scan kernel: the naive O(L) recurrence.
+
+Deliberately NOT the chunked algorithm (that's what both the kernel and
+``repro.models.ssm.ssd_chunked`` implement) — testing chunked-vs-chunked
+would hide shared algebra bugs.  This is the definitional recurrence:
+
+    S_t = exp(-A dt_t) S_{t-1} + dt_t x_t B_t^T ;  y_t = C_t S_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,    # [B, L, H, P]
+    dt: jnp.ndarray,   # [B, L, H]
+    A: jnp.ndarray,    # [H]
+    B_: jnp.ndarray,   # [B, L, G, N]
+    C_: jnp.ndarray,   # [B, L, G, N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C_, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp                       # [B,H,P], [B,H], [B,H,N] x2
+        a = jnp.exp(-Af[None, :] * dtt)             # [B,H]
+        S = a[..., None, None] * S + jnp.einsum("bhp,bh,bhn->bhpn", xt, dtt, Bt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                       # [B, L, H, P]
+    return y.astype(x.dtype), S.astype(x.dtype)

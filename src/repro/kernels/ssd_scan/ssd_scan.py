@@ -1,0 +1,107 @@
+"""Mamba2 SSD chunked scan (Pallas TPU).
+
+One (batch, head) pair per outer grid position; the innermost grid dim
+walks the sequence chunks SEQUENTIALLY (TPU grid order), carrying the
+[P, N] state in VMEM scratch — the kernel-level realisation of the
+``ssd_chunked`` inter-chunk scan in ``repro.models.ssm``.
+
+Per chunk (Q = chunk length) the quadratic "attention form" runs on the
+MXU: scores = C B^T, gated by the decay triangle, plus the state
+carry-in/carry-out terms.  All f32 accumulation; chunk length 128/256
+keeps (Q x Q) + (Q x N) + (P x N) well inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *,
+                nc: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [Q]
+    A = a_ref[0].astype(jnp.float32)                   # scalar
+    B = b_ref[0, :, 0, :].astype(jnp.float32)          # [Q, N]
+    C = c_ref[0, :, 0, :].astype(jnp.float32)          # [Q, N]
+
+    log_a = -A * dt                                    # [Q]
+    cum = jnp.cumsum(log_a)                            # [Q]
+    total = cum[-1]
+
+    # intra-chunk attention form
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # [Q, Q]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    gate = jnp.where(kj <= qi, decay, 0.0)
+    xdt = x * dt[:, None]                              # [Q, P]
+    y = jax.lax.dot_general(scores * gate, xdt, (((1,), (0,)), ((), ())))
+
+    # inter-chunk: incoming state
+    state = state_scr[...]                             # [P, N]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (1,)), ((), ())))            # [Q, P]
+
+    # state update: S <- exp(total) S + sum_u exp(total - cum_u) dt_u x_u B_u^T
+    w = jnp.exp(total - cum)[:, None] * xdt            # [Q, P]
+    contrib = jax.lax.dot_general(w, B, (((0,), (0,)), ((), ())))  # [P, N]
+    state_scr[...] = jnp.exp(total) * state + contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_ref[0, 0] = state_scr[...].astype(st_ref.dtype)
+
+
+def ssd_scan_blhp(
+    x: jnp.ndarray,    # [B, L, H, P]
+    dt: jnp.ndarray,   # [B, L, H]
+    A: jnp.ndarray,    # [H]
+    B_: jnp.ndarray,   # [B, L, G, N]
+    C_: jnp.ndarray,   # [B, L, G, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+    nc = L // chunk
+    rep = H // G
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, chunk=chunk)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B_, C_)
+    return y, final

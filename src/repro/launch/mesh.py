@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device query, and smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU-v5e production mesh: 16x16 = 256 chips per pod ("data","model"),
+    or 2 pods = 512 chips ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """All locally-visible devices on a single "data" axis (RL trainer)."""
+    return jax.make_mesh((jax.device_count(),), ("data",))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything except "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_tp(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -1,0 +1,197 @@
+"""Input ShapeDtypeStructs + activation/cache shardings per (arch, shape).
+
+``input_specs(cfg, shape, mesh)`` returns (specs, shardings) pytrees for
+the step function's data arguments: token batches for train/prefill, the
+(one-token batch, KV/state cache) pair for decode, and the replay batch
+for the paper's qnet.  Stubs per the assignment carve-out: whisper gets
+precomputed frame embeddings, paligemma gets patch embeddings.
+
+Sharding policy for data: batch dim over every non-"model" axis that
+divides it; long sequence dims over "model" when divisible (sequence
+parallelism for the 32k/500k caches); everything else replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import batch_axes
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _div(n: int, axes: tuple[str, ...], mesh: Mesh) -> bool:
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return total > 0 and n % total == 0
+
+
+def data_spec(shape: tuple[int, ...], mesh: Mesh, *, seq_dims: tuple[int, ...] = ()) -> P:
+    """Batch dim 0 over data axes (if divisible); listed seq dims over
+    "model" (if divisible); rest replicated."""
+    ba = batch_axes(mesh)
+    parts: list = [None] * len(shape)
+    if shape and _div(shape[0], ba, mesh):
+        parts[0] = ba if len(ba) > 1 else ba[0]
+    for d in seq_dims:
+        if "model" in mesh.axis_names and shape[d] % mesh.shape["model"] == 0 and parts[d] is None:
+            parts[d] = "model"
+    return P(*parts)
+
+
+def _shard(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ------------------------------------------------------------------ #
+def train_batch_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+        "mask": SDS((B, S), jnp.float32),
+    }
+    shardings = {k: _shard(mesh, data_spec(v.shape, mesh)) for k, v in specs.items()}
+    if cfg.family == "encdec":
+        f = SDS((B, cfg.encdec.n_frames, cfg.d_model), cfg.jnp_dtype)
+        specs["frames"] = f
+        shardings["frames"] = _shard(mesh, data_spec(f.shape, mesh))
+    if cfg.family == "vlm":
+        pshape = (B, cfg.vlm.n_patches, cfg.vlm.vision_dim)
+        specs["patches"] = SDS(pshape, cfg.jnp_dtype)
+        shardings["patches"] = _shard(mesh, data_spec(pshape, mesh))
+    return specs, shardings
+
+
+def qnet_batch_specs(shape: InputShape, mesh: Mesh, *, n_candidates: int = 160):
+    """Replay batch for the paper's DQN train step (damoldqn config)."""
+    from repro.core.agent import STATE_DIM
+    B = shape.global_batch
+    specs = {
+        "states": SDS((B, STATE_DIM), jnp.float32),
+        "rewards": SDS((B,), jnp.float32),
+        "dones": SDS((B,), jnp.float32),
+        "next_fps": SDS((B, n_candidates, STATE_DIM), jnp.float32),
+        "next_mask": SDS((B, n_candidates), jnp.float32),
+    }
+    shardings = {k: _shard(mesh, data_spec(v.shape, mesh)) for k, v in specs.items()}
+    return specs, shardings
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """(tokens, cache) specs for serve_step with a ``seq_len`` cache."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = SDS((B, 1), jnp.int32)
+    cache_tree = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+
+    def cache_spec(path: tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        shp = leaf.shape
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v"):          # [L,B,S,K,Dh]
+            sp = [None] * 5
+            ba = batch_axes(mesh)
+            if _div(shp[1], ba, mesh):
+                sp[1] = ba if len(ba) > 1 else ba[0]
+            if "model" in mesh.axis_names and shp[2] % mesh.shape["model"] == 0:
+                sp[2] = "model"
+            return P(*sp)
+        if name in ("shared_k", "shared_v"):                  # [A,B,S,K,Dh]
+            sp = [None] * 5
+            ba = batch_axes(mesh)
+            if _div(shp[1], ba, mesh):
+                sp[1] = ba if len(ba) > 1 else ba[0]
+            if "model" in mesh.axis_names and shp[2] % mesh.shape["model"] == 0:
+                sp[2] = "model"
+            return P(*sp)
+        if name == "state":                                   # [L,B,H,P,N]
+            sp = [None] * 5
+            ba = batch_axes(mesh)
+            if _div(shp[1], ba, mesh):
+                sp[1] = ba if len(ba) > 1 else ba[0]
+            if "model" in mesh.axis_names and shp[2] % mesh.shape["model"] == 0:
+                sp[2] = "model"
+            return P(*sp)
+        if name == "conv":                                    # [L,B,W-1,C]
+            sp = [None] * 4
+            ba = batch_axes(mesh)
+            if _div(shp[1], ba, mesh):
+                sp[1] = ba if len(ba) > 1 else ba[0]
+            if "model" in mesh.axis_names and shp[3] % mesh.shape["model"] == 0:
+                sp[3] = "model"
+            return P(*sp)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for path, leaf in flat:
+        parts = tuple(M._key_str(p) for p in path)
+        specs.append(cache_spec(parts, leaf))
+    cache_pspecs = jax.tree_util.tree_unflatten(treedef, specs)
+    cache_shardings = jax.tree_util.tree_map(lambda s: _shard(mesh, s), cache_pspecs)
+    tok_sharding = _shard(mesh, data_spec(tokens.shape, mesh))
+    return tokens, cache_tree, tok_sharding, cache_shardings
+
+
+def param_pspecs_for(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = False):
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    pspecs = M.param_pspecs(cfg, tp=tp)
+    if fsdp:
+        ba = batch_axes(mesh)
+        size = 1
+        for a in ba:
+            size *= mesh.shape[a]
+        pspecs = M.add_fsdp(pspecs, cfg, fsdp_axes=tuple(ba), fsdp_size=size)
+    return pspecs
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = False):
+    pspecs = param_pspecs_for(cfg, mesh, fsdp=fsdp)
+    return jax.tree_util.tree_map(lambda s: _shard(mesh, s), pspecs)
+
+
+def zero_opt_shardings(cfg: ArchConfig, mesh: Mesh, param_pspecs_tree):
+    """ZeRO-style: additionally shard optimizer moments over the data axes
+    on the first dimension not already taken (beyond-paper option)."""
+    ba = batch_axes(mesh)
+    axis = ba if len(ba) > 1 else (ba[0] if ba else None)
+    size = 1
+    for a in (ba or ()):
+        size *= mesh.shape[a]
+    tree = M.abstract_params(cfg)
+
+    def widen(spec: P, leaf) -> P:
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for d, p in enumerate(parts):
+            if p is None and axis is not None and leaf.shape[d] % size == 0 and leaf.shape[d] > 0:
+                parts[d] = axis
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map(widen, param_pspecs_tree, tree)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """Unified entry point: ShapeDtypeStruct stand-ins + shardings for every
+    model input of the (arch, input-shape) pair — the dry-run contract.
+
+    train/prefill -> ({"tokens", "labels", "mask", [frames|patches]}, shardings)
+    decode        -> ((tokens, cache), (tok_sharding, cache_shardings))
+    qnet train    -> (replay batch, shardings)
+    """
+    if cfg.family == "qnet":
+        return qnet_batch_specs(shape, mesh)
+    if shape.kind in ("train", "prefill"):
+        specs, shardings = train_batch_specs(cfg, shape, mesh)
+        if shape.kind == "prefill":
+            specs = {k: v for k, v in specs.items() if k not in ("labels", "mask")}
+            shardings = {k: v for k, v in shardings.items() if k in specs}
+        return specs, shardings
+    tokens, cache, tok_sh, cache_sh = decode_specs(cfg, shape, mesh)
+    return (tokens, cache), (tok_sh, cache_sh)

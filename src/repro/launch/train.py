@@ -1,0 +1,132 @@
+"""Training launcher.
+
+Two modes, mirroring the framework's two tiers:
+
+* ``--mode rl`` (default; the paper): distributed DA-MolDQN over an
+  antioxidant dataset — workers on the host mesh, per-episode param sync,
+  checkpointing, OFR/reward logging.
+
+* ``--mode lm --arch <id>``: train a (reduced or full) model-zoo backbone
+  on the SMILES LM corpus with the same train_step the dry-run lowers —
+  on CPU use ``--reduced`` (the full configs only make sense on the
+  production mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --mode rl --episodes 40
+    PYTHONPATH=src python -m repro.launch.train --mode lm --arch stablelm-1.6b \
+        --reduced --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("rl", "lm"), default="rl")
+    # rl args
+    ap.add_argument("--episodes", type=int, default=40)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--mols-per-worker", type=int, default=4)
+    ap.add_argument("--sync", choices=("episode", "step"), default="episode")
+    ap.add_argument("--ckpt-dir", default=".cache/rl_ckpt")
+    # lm args
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    if args.mode == "rl":
+        train_rl(args)
+    else:
+        train_lm(args)
+
+
+def train_rl(args) -> None:
+    from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
+    from repro.core.distributed import DistributedTrainer, greedy_optimize, \
+        optimization_failure_rate
+    from repro.data.datasets import antioxidant_dataset, dataset_property_table, \
+        train_test_split
+    from repro.predictors import PropertyService
+    from repro.predictors.training import ensure_trained
+
+    bm, bp, im, ip_, metrics = ensure_trained()
+    service = PropertyService(bm, bp, im, ip_)
+    ds = antioxidant_dataset(600)
+    train, test = train_test_split(ds)
+    props = dataset_property_table(train)
+    rcfg = RewardConfig.from_dataset(props["bde"], props["ip"])
+
+    n_mols = args.workers * args.mols_per_worker
+    cfg = TrainerConfig(
+        n_workers=args.workers, mols_per_worker=args.mols_per_worker,
+        episodes=args.episodes, sync_mode=args.sync,
+        dqn=DQNConfig(epsilon_decay=0.97))
+    trainer = DistributedTrainer(cfg, train[:n_mols], service, rcfg)
+    mgr = CheckpointManager(args.ckpt_dir)
+
+    t0 = time.time()
+    for ep in range(args.episodes):
+        st = trainer.train_episode()
+        if (ep + 1) % 5 == 0 or ep == args.episodes - 1:
+            print(f"[ep {st['episode']:4d}] reward {st['mean_final_reward']:8.3f} "
+                  f"loss {st['loss']:10.4f} eps {st['epsilon']:.3f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+            mgr.save(st["episode"], trainer.mean_params())
+
+    agent = trainer.as_agent(epsilon=0.0)
+    recs = greedy_optimize(agent, train[:n_mols], service, rcfg, cfg.env)
+    print(f"train-set OFR: {optimization_failure_rate(recs):.3f}")
+    print(f"cache hit rate: {service.cache.hit_rate:.3f}")
+
+
+def train_lm(args) -> None:
+    from repro.chem.smiles import canonical_smiles
+    from repro.configs import get_config
+    from repro.data.datasets import antioxidant_dataset
+    from repro.data.pipeline import lm_batches_from_smiles
+    from repro.data.tokenizer import SmilesTokenizer
+    from repro.launch.steps import make_train_step
+    from repro.models import init_params
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tok = SmilesTokenizer()
+    mols = antioxidant_dataset(256)
+    smiles = [canonical_smiles(m) for m in mols]
+    batches = lm_batches_from_smiles(smiles, tok, args.batch, args.seq)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    step, opt = make_train_step(cfg)
+    opt_state = opt.init(params)
+    jstep = jax.jit(step)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), batches):
+        if cfg.family == "encdec":
+            batch["frames"] = rng.standard_normal(
+                (args.batch, cfg.encdec.n_frames, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            batch["patches"] = rng.standard_normal(
+                (args.batch, cfg.vlm.n_patches, cfg.vlm.vision_dim)).astype(np.float32)
+        params, opt_state, loss = jstep(params, opt_state, batch)
+        if (i + 1) % 10 == 0:
+            print(f"[step {i+1:4d}] loss {float(loss):.4f} ({time.time()-t0:.0f}s)",
+                  flush=True)
+    print(json.dumps({"final_loss": float(loss), "steps": args.steps}))
+
+
+if __name__ == "__main__":
+    main()

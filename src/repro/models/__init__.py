@@ -1,0 +1,27 @@
+"""Model zoo: every assigned architecture as a pure-JAX pytree model.
+
+All families share the same contract (see ``repro.models.model``):
+
+    init_params(cfg, key)            real params (smoke tests)
+    abstract_params(cfg)             ShapeDtypeStruct tree (dry-run)
+    forward_train(params, cfg, batch)        -> logits
+    loss_fn(params, cfg, batch)              -> scalar
+    init_cache(cfg, batch, seq_len)          -> decode cache tree
+    serve_step(params, cfg, cache, tokens, pos) -> logits, cache
+    param_pspecs(cfg, mesh_axes)     PartitionSpec tree (launch/dryrun)
+
+Per-layer parameters are stacked on a leading axis and the forward pass is
+a single ``jax.lax.scan``, so HLO size / compile time is depth-independent
+(a 94-layer MoE lowers like a 1-layer model) — essential for the 80-config
+dry-run matrix.
+"""
+
+from repro.models.model import (
+    init_params, abstract_params, forward_train, loss_fn,
+    init_cache, serve_step, param_pspecs, count_params,
+)
+
+__all__ = [
+    "init_params", "abstract_params", "forward_train", "loss_fn",
+    "init_cache", "serve_step", "param_pspecs", "count_params",
+]

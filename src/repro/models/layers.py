@@ -1,0 +1,272 @@
+"""Shared neural building blocks: norms, RoPE, attention (GQA/MQA, causal /
+sliding-window / prefix-LM / cross), dense MLPs.
+
+Everything is a pure function over explicit param dicts.  Attention has two
+compute paths: the pure-jnp reference (default — also what the dry-run
+lowers, so roofline numbers come from transparent HLO) and the Pallas
+flash-attention kernel (``use_pallas``), validated against the reference in
+interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------------ #
+# init helpers
+# ------------------------------------------------------------------ #
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# norms
+# ------------------------------------------------------------------ #
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm with f32 statistics and a dtype-controlled backward.
+
+    A naive implementation upcasts the activations to f32; its backward
+    then contains ``convert(dynamic-slice(residual_stack))``, which XLA
+    rewrites to ``dynamic-slice(convert(stack))`` and hoists — keeping a
+    full f32 copy of every layer's saved activations alive (+12 GiB/chip
+    measured on stablelm train_4k).  The custom VJP below keeps every
+    full-size tensor in the input dtype; only per-position scalars and the
+    cross-feature reductions run in f32."""
+    return _rms_fwd(x, scale, eps)[0]
+
+
+def _rms_stats(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    return jax.lax.rsqrt(var + eps)          # f32 [...]
+
+
+def _rms_fwd(x, scale, eps):
+    inv = _rms_stats(x, eps)
+    y = x * inv[..., None].astype(x.dtype) * scale.astype(x.dtype)
+    return y, (x, scale)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale = res
+    inv = _rms_stats(x, eps)                                   # recompute: cheap
+    gs = g * scale.astype(g.dtype)                             # bf16 [... , d]
+    # m = mean_d(gs * x) in f32 (reduction), per-position scalar
+    m = jnp.einsum("...d,...d->...", gs, x,
+                   preferred_element_type=jnp.float32) / x.shape[-1]
+    c1 = inv[..., None].astype(x.dtype)                        # bf16 scalars
+    c2 = (inv ** 3 * m)[..., None].astype(x.dtype)
+    dx = gs * c1 - x * c2
+    dscale = jnp.einsum("...d,...->d", g * x,
+                        inv.astype(g.dtype),
+                        preferred_element_type=jnp.float32).astype(scale.dtype)
+    return dx, dscale
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+# ------------------------------------------------------------------ #
+# rotary position embedding
+# ------------------------------------------------------------------ #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, n, d]; positions [..., S] (broadcastable int32)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                               # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# attention
+# ------------------------------------------------------------------ #
+def make_attn_mask(
+    q_len: int,
+    k_len: int,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """bool[q_len, k_len]; True = attend.  ``q_offset`` shifts query
+    positions (decode: q_offset = pos)."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(k_len)[None, :]
+    mask = jnp.ones((q_len, k_len), dtype=bool)
+    if causal:
+        mask = kj <= qi
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    if prefix_len > 0:
+        mask = mask | (kj < prefix_len)
+    return mask
+
+
+def gqa_attention(
+    q: jnp.ndarray,          # [B, Sq, H, Dh]
+    k: jnp.ndarray,          # [B, Sk, K, Dh]
+    v: jnp.ndarray,          # [B, Sk, K, Dh]
+    mask: jnp.ndarray | None = None,   # explicit [Sq,Sk]/[B,Sq,Sk] (decode path)
+    *,
+    causal: bool = False,
+    window: int | None = None,
+    prefix_len: int = 0,
+    q_offset: int = 0,
+    q_block: int = 1024,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Grouped-query attention; returns [B, Sq, H, Dh].
+
+    Masks are built on the fly per query block (never materialising an
+    [Sq, Sk] tensor — at 32k that alone is 1 GiB) and the scores tensor is
+    blocked over queries, bounding the f32 logits working set to
+    ``B x heads x q_block x Sk`` — the XLA-expressible half of flash
+    attention.  The Pallas kernel replaces this entirely on real TPUs.
+    """
+    if use_pallas and mask is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      prefix_len=prefix_len)
+    B, Sq, H, Dh = q.shape
+    if mask is not None or Sq <= q_block or Sq % q_block != 0:
+        return _attn_block(q, k, v, mask, causal=causal, window=window,
+                           prefix_len=prefix_len, q_start=q_offset)
+
+    nb = Sq // q_block
+    qb = q.reshape(B, nb, q_block, H, Dh)
+
+    @jax.checkpoint  # recompute block scores in bwd: peak = ONE block
+    def block_fn(qblk, i):
+        return _attn_block(qblk, k, v, None, causal=causal, window=window,
+                           prefix_len=prefix_len, q_start=q_offset + i * q_block)
+
+    def block(carry, inp):
+        i, qblk = inp
+        return carry, block_fn(qblk, i)
+
+    _, outs = jax.lax.scan(block, (), (jnp.arange(nb), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dh)
+
+
+def _attn_block(
+    q: jnp.ndarray,          # [B, Sq, H, Dh]
+    k: jnp.ndarray, v: jnp.ndarray,
+    mask: jnp.ndarray | None,
+    *, causal: bool, window: int | None, prefix_len: int, q_start,
+) -> jnp.ndarray:
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    K = k.shape[2]
+    R = H // K
+    qg = q.reshape(B, Sq, K, R, Dh)
+    scale = Dh ** -0.5
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if mask is None:
+        qi = q_start + jnp.arange(Sq)[:, None]
+        kj = jnp.arange(Sk)[None, :]
+        m = jnp.ones((Sq, Sk), bool)
+        if causal:
+            m = kj <= qi
+        if window is not None:
+            m = m & (kj > qi - window)
+        if prefix_len > 0:
+            m = m | (kj < prefix_len)
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+    else:
+        m = mask if mask.ndim == 3 else mask[None]
+        logits = jnp.where(m[:, None, None], logits, -1e30)
+    # f32 softmax math, bf16 PV matmul (halves score-tensor HBM traffic)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def attn_params_init(key, cfg, dtype) -> dict:
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (D, H, Dh), dtype),
+        "wk": dense_init(k2, (D, K, Dh), dtype),
+        "wv": dense_init(k3, (D, K, Dh), dtype),
+        "wo": dense_init(k4, (H, Dh, D), dtype, scale=(1.0 / (H * Dh)) ** 0.5),
+    }
+
+
+def attn_forward(
+    p: dict,
+    x: jnp.ndarray,                 # [B, S, D]
+    positions: jnp.ndarray,         # [B, S] (or [S])
+    *,
+    theta: float,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int = 0,
+    mask: jnp.ndarray | None = None,
+    kv_override: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    rope: bool = True,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Self-attention (or cross when kv_override=(k, v) precomputed)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+        v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+        if rope:
+            q = apply_rope(q, positions, theta)
+            k = apply_rope(k, positions, theta)
+    else:
+        k, v = kv_override
+        if rope:
+            q = apply_rope(q, positions, theta)
+    out = gqa_attention(q, k, v, mask, causal=causal, window=window,
+                        prefix_len=prefix_len, use_pallas=use_pallas)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"])
+
+
+def cross_kv(p: dict, memory: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V from encoder memory [B, T, D]."""
+    k = jnp.einsum("btd,dke->btke", memory, p["wk"])
+    v = jnp.einsum("btd,dke->btke", memory, p["wv"])
+    return k, v
+
+
+# ------------------------------------------------------------------ #
+# dense MLPs
+# ------------------------------------------------------------------ #
+def mlp_params_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),
+        "w2": dense_init(k2, (d_ff, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["w3"] = dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_forward(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ p["w1"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown act {act}")
+    return h @ p["w2"]

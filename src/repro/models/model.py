@@ -1,0 +1,735 @@
+"""Model assembly: every family behind one contract.
+
+Families: dense, moe, ssm, hybrid (zamba2: mamba2 + shared attn block),
+encdec (whisper: stub frame embeddings -> encoder -> decoder w/ cross-attn),
+vlm (paligemma: stub patch embeddings -> projector -> prefix-LM decoder),
+qnet (the paper's DQN — handled by repro.core; only abstract shapes here).
+
+Parameters are stacked per layer ([L, ...] leading axis) and the forward
+pass is one ``lax.scan``.  The hybrid family's shared attention block is a
+single (non-stacked) param group closed over by the scan body and applied
+every ``shared_attn_every`` layers behind ``lax.cond``.
+
+Dry-run support: ``abstract_params`` builds the ShapeDtypeStruct tree via
+``jax.eval_shape`` (no allocation); ``param_pspecs`` assigns a
+PartitionSpec to every leaf by key path (tensor-parallel over "model",
+expert-parallel for MoE, replicated norms/scalars).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as Lyr
+from repro.models import moe as Moe
+from repro.models import ssm as Ssm
+
+PyTree = Any
+
+
+# ================================================================== #
+# parameter construction
+# ================================================================== #
+def _block_init(key, cfg: ArchConfig, dtype, *, cross: bool = False) -> dict:
+    """One transformer block (attn + mlp/moe) param group."""
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": Lyr.attn_params_init(ks[0], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cross:
+        p["norm_x"] = jnp.ones((cfg.d_model,), dtype)
+        p["cross"] = Lyr.attn_params_init(ks[1], cfg, dtype)
+    if cfg.family in ("moe",):
+        p["moe"] = Moe.moe_params_init(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = Lyr.mlp_params_init(ks[3], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _mamba_block_init(key, cfg: ArchConfig, dtype) -> dict:
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "ssm": Ssm.ssm_params_init(key, cfg, dtype),
+    }
+
+
+def _hybrid_shared_init(key, cfg: ArchConfig, dtype) -> dict:
+    """Zamba2's shared attention(+MLP) block — ONE copy reused."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": Lyr.attn_params_init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": Lyr.mlp_params_init(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+
+    if cfg.family == "qnet":
+        from repro.core.agent import QNetwork
+        return QNetwork().init(key)
+
+    params["embed"] = Lyr.dense_init(keys[0], (cfg.vocab, cfg.d_model), dtype, scale=0.02)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tied_embeddings:
+        params["unembed"] = Lyr.dense_init(keys[1], (cfg.d_model, cfg.vocab), dtype)
+
+    L = cfg.n_layers
+    lkeys = jax.random.split(keys[2], L)
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["blocks"] = jax.vmap(lambda k: _block_init(k, cfg, dtype))(lkeys)
+    elif cfg.family == "ssm":
+        params["blocks"] = jax.vmap(lambda k: _mamba_block_init(k, cfg, dtype))(lkeys)
+    elif cfg.family == "hybrid":
+        params["blocks"] = jax.vmap(lambda k: _mamba_block_init(k, cfg, dtype))(lkeys)
+        params["shared_attn"] = _hybrid_shared_init(keys[3], cfg, dtype)
+    elif cfg.family == "encdec":
+        params["blocks"] = jax.vmap(lambda k: _block_init(k, cfg, dtype, cross=True))(lkeys)
+        ekeys = jax.random.split(keys[4], cfg.encdec.n_enc_layers)
+        params["enc_blocks"] = jax.vmap(lambda k: _block_init(k, cfg, dtype))(ekeys)
+        params["enc_pos"] = Lyr.dense_init(keys[5], (cfg.encdec.n_frames, cfg.d_model),
+                                           dtype, scale=0.02)
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    if cfg.family == "vlm":
+        params["vision_proj"] = {
+            "w": Lyr.dense_init(keys[6], (cfg.vlm.vision_dim, cfg.d_model), dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    tree = abstract_params(cfg)
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(tree))
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top_k of E experts)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    # expert weights are [E, D, F] x3 per layer
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    expert_per_layer = 3 * cfg.d_model * cfg.d_ff * E
+    expert_total = cfg.n_layers * expert_per_layer
+    return total - expert_total + expert_total * K // E
+
+
+# ================================================================== #
+# forward passes
+# ================================================================== #
+def _seq_shard(h: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Sequence-parallel activation constraint (cfg.seq_shard).
+
+    Megatron-style tensor parallelism all-reduces the FULL activation
+    [B, S, D] after attention and MLP; with 56-head archs (yi-34b) whose
+    heads don't divide TP=16 GSPMD even falls back to replicated-compute
+    attention (useful-FLOPs ratio 0.07 measured).  Constraining the token
+    dim to "model" between blocks turns those all-reduces into
+    reduce-scatter + all-gather pairs and shards the attention compute by
+    sequence — the classic sequence-parallel schedule, here applied as a
+    GSPMD constraint rather than explicit collectives."""
+    if not cfg.seq_shard or h.ndim != 3:
+        return h
+    U = P.UNCONSTRAINED
+    try:
+        return jax.lax.with_sharding_constraint(h, P(U, "model", U))
+    except Exception:           # no ambient mesh (plain CPU runs)
+        return h
+
+
+def _dense_block_fwd(cfg: ArchConfig, p: dict, h: jnp.ndarray, positions,
+                     aux: jnp.ndarray, *, causal: bool = True,
+                     prefix_len: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    h = _seq_shard(h, cfg)
+    x = Lyr.rms_norm(h, p["norm1"], cfg.norm_eps)
+    h = h + Lyr.attn_forward(p["attn"], x, positions, theta=cfg.rope_theta,
+                             causal=causal, window=cfg.attn_window,
+                             prefix_len=prefix_len, use_pallas=cfg.use_pallas)
+    h = _seq_shard(h, cfg)
+    x = Lyr.rms_norm(h, p["norm2"], cfg.norm_eps)
+    if "moe" in p:
+        y, a = Moe.moe_forward(p["moe"], x, cfg)
+        h = h + y
+        aux = aux + a
+    elif "mlp" in p:
+        h = h + Lyr.mlp_forward(p["mlp"], x, cfg.act)
+    return h, aux
+
+
+def _mamba_block_fwd(cfg: ArchConfig, p: dict, h: jnp.ndarray) -> jnp.ndarray:
+    x = Lyr.rms_norm(h, p["norm1"], cfg.norm_eps)
+    return h + Ssm.ssm_forward(p["ssm"], x, cfg, use_pallas=cfg.use_pallas)
+
+
+def _shared_attn_fwd(cfg: ArchConfig, p: dict, h: jnp.ndarray, positions) -> jnp.ndarray:
+    x = Lyr.rms_norm(h, p["norm1"], cfg.norm_eps)
+    h = h + Lyr.attn_forward(p["attn"], x, positions, theta=cfg.rope_theta,
+                             causal=True, window=cfg.attn_window,
+                             use_pallas=cfg.use_pallas)
+    x = Lyr.rms_norm(h, p["norm2"], cfg.norm_eps)
+    return h + Lyr.mlp_forward(p["mlp"], x, cfg.act)
+
+
+def _stack_scan(body, h0, stacked_params, cfg: ArchConfig, *extra_carry):
+    """scan over stacked layer params with optional remat.
+
+    prevent_cse=False per the jax docs: inside scan the extra optimization
+    barriers are unnecessary and (measured here) leave a hoisted f32 copy
+    of the whole residual stack alive — 2x activation memory."""
+    fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+
+    def scan_body(carry, lp):
+        return fn(carry, lp), None
+
+    carry, _ = jax.lax.scan(scan_body, (h0, *extra_carry), stacked_params)
+    return carry
+
+
+def forward_train(params: PyTree, cfg: ArchConfig, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B,S,V], aux_loss scalar)."""
+    h, aux = forward_hidden(params, cfg, batch)
+    return _unembed(params, cfg, h), aux
+
+
+def forward_hidden(params: PyTree, cfg: ArchConfig, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Final-norm hidden states [B,S,D] (text positions only for VLM)."""
+    if cfg.family == "encdec":
+        return _forward_encdec_hidden(params, cfg, batch)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    prefix_len = 0
+
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(h.dtype)
+        vp = params["vision_proj"]
+        himg = patches @ vp["w"] + vp["b"]
+        h = jnp.concatenate([himg, h], axis=1)
+        prefix_len = cfg.vlm.n_patches
+        S = h.shape[1]
+
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            h, aux = carry
+            h, aux = _dense_block_fwd(cfg, lp, h, positions, aux,
+                                      prefix_len=prefix_len)
+            return h, aux
+        (h, aux) = _stack_scan(body, h, params["blocks"], cfg, aux0)
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            (h,) = carry
+            return (_mamba_block_fwd(cfg, lp, h),)
+        (h,) = _stack_scan(body, h, params["blocks"], cfg)
+        aux = aux0
+    elif cfg.family == "hybrid":
+        # Segmented: scan each k-layer mamba group, then the shared attn
+        # block (python loop over the ~L/k segments).  Keeping the shared
+        # block OUT of the layer scan matters twice over: (a) decode needs
+        # one KV cache PER APPLICATION (weights are shared, activations are
+        # not — a single cache slot overwritten k times per token breaks
+        # train/decode equivalence), and (b) lax.cond-in-scan carries the
+        # shared cache through every one of the L iterations (measured
+        # +tens of GB/step of copy traffic on long_500k).
+        shared = params["shared_attn"]
+
+        def body(carry, lp):
+            (h,) = carry
+            return (_mamba_block_fwd(cfg, lp, h),)
+
+        for lo, hi, with_attn in _hybrid_segments(cfg):
+            seg = jax.tree_util.tree_map(lambda x: x[lo:hi], params["blocks"])
+            (h,) = _stack_scan(body, h, seg, cfg)
+            if with_attn:
+                h = _shared_attn_fwd(cfg, shared, h, positions)
+        aux = aux0
+    else:
+        raise ValueError(cfg.family)
+
+    h = Lyr.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm":
+        h = h[:, prefix_len:]
+    return h, aux
+
+
+def _with_index(blocks: PyTree, n_layers: int) -> tuple:
+    return (blocks, jnp.arange(n_layers, dtype=jnp.int32))
+
+
+def _hybrid_segments(cfg: ArchConfig) -> list[tuple[int, int, bool]]:
+    """(layer_lo, layer_hi, apply_shared_attn) segments: the shared block
+    runs after layers k-1, 2k-1, ... (matching the original cond-in-scan
+    schedule)."""
+    k = cfg.shared_attn_every
+    out = []
+    lo = 0
+    while lo < cfg.n_layers:
+        hi = min(lo + k, cfg.n_layers)
+        out.append((lo, hi, hi - lo == k))
+        lo = hi
+    return out
+
+
+def hybrid_n_apps(cfg: ArchConfig) -> int:
+    return sum(1 for _, _, a in _hybrid_segments(cfg) if a)
+
+
+def _unembed(params, cfg, h):
+    if cfg.tied_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    return h @ params["unembed"]
+
+
+def _forward_encdec_hidden(params, cfg, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+    frames = batch["frames"].astype(cfg.jnp_dtype)     # [B, T, D] stub embeddings
+    B, T, _ = frames.shape
+    hm = frames + params["enc_pos"][None, :T]
+    pos_e = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def enc_body(carry, lp):
+        h, aux = carry
+        h, aux = _dense_block_fwd(cfg, lp, h, pos_e, aux, causal=False)  # bidirectional
+        return h, aux
+    hm, _ = _stack_scan(enc_body, hm, params["enc_blocks"], cfg, jnp.zeros((), jnp.float32))
+    memory = Lyr.rms_norm(hm, params["enc_final_norm"], cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = params["embed"][tokens]
+    pos_d = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def dec_body(carry, lp):
+        h, aux = carry
+        x = Lyr.rms_norm(h, lp["norm1"], cfg.norm_eps)
+        h = h + Lyr.attn_forward(lp["attn"], x, pos_d, theta=cfg.rope_theta,
+                                 causal=True, use_pallas=cfg.use_pallas)
+        x = Lyr.rms_norm(h, lp["norm_x"], cfg.norm_eps)
+        kv = Lyr.cross_kv(lp["cross"], memory)
+        h = h + Lyr.attn_forward(lp["cross"], x, pos_d, causal=False,
+                                 theta=cfg.rope_theta, kv_override=kv, rope=False)
+        x = Lyr.rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + Lyr.mlp_forward(lp["mlp"], x, cfg.act)
+        return h, aux
+
+    h, aux = _stack_scan(dec_body, h, params["blocks"], cfg, jnp.zeros((), jnp.float32))
+    return Lyr.rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+_LOSS_CHUNK = 512
+
+
+def _xent_chunk(params, cfg, h, labels, mask):
+    """f32 cross-entropy for one sequence chunk.
+
+    One-hot contraction instead of take_along_axis: gathering along a
+    "model"-sharded vocab dim would force an all-gather of the logits;
+    the iota-compare contraction partitions cleanly (GSPMD keeps the
+    vocab dim sharded and psums the scalar)."""
+    logits = _unembed(params, cfg, h).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, len(logits.shape) - 1)).astype(logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    return jnp.sum((logz - ll) * mask)
+
+
+def loss_fn(params: PyTree, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    """Masked LM cross-entropy + MoE aux.
+
+    The unembed+softmax runs in sequence chunks (rematted scan) so the f32
+    logits working set is [B, chunk, V] instead of [B, S, V] — at 100k
+    vocab the full tensor alone would blow the per-chip HBM budget."""
+    h, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch["mask"].astype(jnp.float32)
+    B, S = labels.shape
+    chunk = _LOSS_CHUNK if (S % _LOSS_CHUNK == 0 and S > _LOSS_CHUNK) else S
+    if chunk == S:
+        total = _xent_chunk(params, cfg, h, labels, mask)
+    else:
+        nc = S // chunk
+        hs = jnp.moveaxis(h.reshape(B, nc, chunk, -1), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+        ms = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+        @jax.checkpoint
+        def chunk_loss(hc, lc, mc):
+            return _xent_chunk(params, cfg, hc, lc, mc)
+
+        def body(acc, xs):
+            hc, lc, mc = xs
+            return acc + chunk_loss(hc, lc, mc), None
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls, ms))
+    return total / jnp.maximum(mask.sum(), 1.0) + aux
+
+
+# ================================================================== #
+# decode (serve_step)
+# ================================================================== #
+def cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Ring-buffer length: the window for SWA archs, else the full seq."""
+    if cfg.attn_window is not None and cfg.attn_window < seq_len:
+        return cfg.attn_window
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> PyTree:
+    """Abstract-shaped zero cache (real zeros; use eval_shape for dry-run)."""
+    dtype = cfg.jnp_dtype
+    L, K, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    Sc = cache_len(cfg, seq_len)
+    if cfg.family in ("dense", "moe", "vlm"):
+        S_tot = Sc + (cfg.vlm.n_patches if cfg.family == "vlm" else 0)
+        return {
+            "k": jnp.zeros((L, batch, S_tot, K, Dh), dtype),
+            "v": jnp.zeros((L, batch, S_tot, K, Dh), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        d = Ssm.ssm_dims(cfg)
+        return {
+            "conv": jnp.zeros((L, batch, cfg.ssm.conv_width - 1, d["conv_dim"]), dtype),
+            "state": jnp.zeros((L, batch, d["n_heads"], cfg.ssm.head_dim,
+                                cfg.ssm.state_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        d = Ssm.ssm_dims(cfg)
+        napps = hybrid_n_apps(cfg)
+        return {
+            "conv": jnp.zeros((L, batch, cfg.ssm.conv_width - 1, d["conv_dim"]), dtype),
+            "state": jnp.zeros((L, batch, d["n_heads"], cfg.ssm.head_dim,
+                                cfg.ssm.state_dim), dtype),
+            # ONE KV cache per shared-block application: weights are shared,
+            # the attended activations are not
+            "shared_k": jnp.zeros((napps, batch, Sc, K, Dh), dtype),
+            "shared_v": jnp.zeros((napps, batch, Sc, K, Dh), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        T = cfg.encdec.n_frames
+        return {
+            "k": jnp.zeros((L, batch, Sc, K, Dh), dtype),
+            "v": jnp.zeros((L, batch, Sc, K, Dh), dtype),
+            "cross_k": jnp.zeros((L, batch, T, K, Dh), dtype),
+            "cross_v": jnp.zeros((L, batch, T, K, Dh), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def _decode_attn(cfg, p, x, pos, ck, cv, Sc, *, prefix_len: int = 0):
+    """One-token attention against a (ring) cache.
+
+    x [B,1,D]; ck/cv [B,Sc(+prefix),K,Dh]; pos scalar absolute position.
+    Keys are stored ALREADY rotated.  Returns (out [B,1,D], new ck, cv).
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k_new = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v_new = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = Lyr.apply_rope(q, posv, cfg.rope_theta)
+    k_new = Lyr.apply_rope(k_new, posv, cfg.rope_theta)
+
+    slot = prefix_len + (pos % Sc)
+    ck = jax.lax.dynamic_update_slice(ck, k_new, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v_new, (0, slot, 0, 0))
+
+    # validity: ring slots hold absolute positions p' = slot + floor stuff;
+    # a slot s (s>=prefix) is valid iff its absolute position <= pos and
+    # > pos - Sc (ring overwrite guarantees the latter); before wrap-around
+    # slots with s' > pos are empty.
+    s_idx = jnp.arange(ck.shape[1])
+    ring = s_idx >= prefix_len
+    abs_pos = jnp.where(ring, _ring_abs_pos(s_idx - prefix_len, pos, Sc), 0)
+    # a ring slot is valid iff it holds a real position: 0 <= abs <= pos
+    valid = jnp.where(ring, (abs_pos <= pos) & (abs_pos >= 0), True)
+    if cfg.attn_window is not None:
+        valid = valid & jnp.where(ring, abs_pos > pos - cfg.attn_window, True)
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, ck.shape[1]))
+    out = Lyr.gqa_attention(q, ck, cv, mask)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), ck, cv
+
+
+def _ring_abs_pos(slot: jnp.ndarray, pos: jnp.ndarray, Sc: int) -> jnp.ndarray:
+    """Absolute position stored in ring slot ``slot`` after writing ``pos``."""
+    cur_slot = pos % Sc
+    base = pos - cur_slot
+    return jnp.where(slot <= cur_slot, base + slot, base - Sc + slot)
+
+
+def serve_step(params: PyTree, cfg: ArchConfig, cache: PyTree,
+               tokens: jnp.ndarray) -> tuple[jnp.ndarray, PyTree]:
+    """Decode ONE token: tokens [B,1] -> (logits [B,1,V], new cache)."""
+    pos = cache["pos"]
+    h = params["embed"][tokens]
+    B = tokens.shape[0]
+    Sc = cache["k"].shape[2] if "k" in cache else None
+    prefix = cfg.vlm.n_patches if cfg.family == "vlm" else 0
+    if prefix:
+        Sc = cache["k"].shape[2] - prefix
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            h = carry
+            lp, ck, cv = xs
+            x = Lyr.rms_norm(h, lp["norm1"], cfg.norm_eps)
+            a, ck, cv = _decode_attn(cfg, lp["attn"], x, pos, ck, cv, Sc, prefix_len=prefix)
+            h = h + a
+            x = Lyr.rms_norm(h, lp["norm2"], cfg.norm_eps)
+            if "moe" in lp:
+                y, _ = Moe.moe_forward(lp["moe"], x, cfg)
+                h = h + y
+            else:
+                h = h + Lyr.mlp_forward(lp["mlp"], x, cfg.act)
+            return h, (ck, cv)
+        h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            h = carry
+            lp, conv, state = xs
+            x = Lyr.rms_norm(h, lp["norm1"], cfg.norm_eps)
+            y, conv, state = Ssm.ssm_decode_step(lp["ssm"], x, cfg, conv, state)
+            return h + y, (conv, state)
+        h, (convs, states) = jax.lax.scan(
+            body, h, (params["blocks"], cache["conv"], cache["state"]))
+        new_cache = {"conv": convs, "state": states, "pos": pos + 1}
+
+    elif cfg.family == "hybrid":
+        # segmented like forward_hidden: per-application shared KV caches,
+        # carried only across their own segment boundary (no per-layer
+        # cond/copy traffic)
+        shared = params["shared_attn"]
+
+        def body(carry, xs):
+            h = carry
+            lp, conv, state = xs
+            x = Lyr.rms_norm(h, lp["norm1"], cfg.norm_eps)
+            y, conv, state = Ssm.ssm_decode_step(lp["ssm"], x, cfg, conv, state)
+            return h + y, (conv, state)
+
+        convs, states, sks, svs = [], [], [], []
+        app = 0
+        for lo, hi, with_attn in _hybrid_segments(cfg):
+            seg = jax.tree_util.tree_map(lambda x: x[lo:hi], params["blocks"])
+            h, (conv_s, state_s) = jax.lax.scan(
+                body, h, (seg, cache["conv"][lo:hi], cache["state"][lo:hi]))
+            convs.append(conv_s)
+            states.append(state_s)
+            if with_attn:
+                x = Lyr.rms_norm(h, shared["norm1"], cfg.norm_eps)
+                a, sk, sv = _decode_attn(cfg, shared["attn"], x, pos,
+                                         cache["shared_k"][app],
+                                         cache["shared_v"][app],
+                                         cache["shared_k"].shape[2])
+                h = h + a
+                x = Lyr.rms_norm(h, shared["norm2"], cfg.norm_eps)
+                h = h + Lyr.mlp_forward(shared["mlp"], x, cfg.act)
+                sks.append(sk)
+                svs.append(sv)
+                app += 1
+
+        new_cache = {
+            "conv": jnp.concatenate(convs, axis=0),
+            "state": jnp.concatenate(states, axis=0),
+            "shared_k": jnp.stack(sks), "shared_v": jnp.stack(svs),
+            "pos": pos + 1,
+        }
+
+    elif cfg.family == "encdec":
+        def body(carry, xs):
+            h = carry
+            lp, ck, cv, xk, xv = xs
+            x = Lyr.rms_norm(h, lp["norm1"], cfg.norm_eps)
+            a, ck, cv = _decode_attn(cfg, lp["attn"], x, pos, ck, cv, ck.shape[1])
+            h = h + a
+            x = Lyr.rms_norm(h, lp["norm_x"], cfg.norm_eps)
+            a = Lyr.attn_forward(lp["cross"], x, jnp.zeros((B, 1), jnp.int32),
+                                 causal=False, theta=cfg.rope_theta,
+                                 kv_override=(xk, xv), rope=False)
+            h = h + a
+            x = Lyr.rms_norm(h, lp["norm2"], cfg.norm_eps)
+            h = h + Lyr.mlp_forward(lp["mlp"], x, cfg.act)
+            return h, (ck, cv)
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache)
+        new_cache.update({"k": ks, "v": vs, "pos": pos + 1})
+    else:
+        raise ValueError(cfg.family)
+
+    h = Lyr.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, h), new_cache
+
+
+# ================================================================== #
+# sharding
+# ================================================================== #
+def _axis_for(dim: int, tp: int) -> bool:
+    return dim % tp == 0
+
+
+def add_fsdp(pspecs: PyTree, cfg: ArchConfig, *, fsdp_axes: tuple[str, ...],
+             fsdp_size: int, min_elements: int = 1_000_000) -> PyTree:
+    """FSDP/ZeRO-3: additionally shard every large leaf over the data axes.
+
+    Picks the first unassigned dim divisible by the data-axis product
+    (skipping the stacked-layer dim 0 — that's the scan axis).  GSPMD then
+    all-gathers each layer's weights inside the scan and reduce-scatters
+    its grads — the standard FSDP schedule, visible in the §Roofline
+    collective table.  Required for the >=20B archs: params+opt at TP=16
+    alone exceed 16 GB/chip."""
+    import math
+    tree = abstract_params(cfg)
+    axis = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+
+    def widen(spec: P, leaf) -> P:
+        if math.prod(leaf.shape) < min_elements:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        start = 1 if len(leaf.shape) >= 2 and leaf.shape[0] <= 256 else 0
+        for d in range(start, len(parts)):
+            if parts[d] is None and leaf.shape[d] % fsdp_size == 0:
+                parts[d] = axis
+                return P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map(widen, pspecs, tree)
+
+
+def param_pspecs(cfg: ArchConfig, tp: int = 16, model_axis: str = "model") -> PyTree:
+    """PartitionSpec tree matching ``abstract_params(cfg)``.
+
+    Policy (tensor/expert parallel over ``model_axis``; everything batch-
+    like handled by activation shardings):
+      * embed [V,D] -> (model, None); unembed [D,V] -> (None, model)
+      * attention: shard the head dim when divisible by tp, else the
+        d_model input dim (row parallel), else replicate
+      * mlp w1/w3 [D,F] -> (None, model); w2 [F,D] -> (model, None)
+      * moe experts [E,D,F] -> (model, None, None) when E%tp==0 (expert
+        parallel: qwen3) else (None, None, model) (mixtral: 8 experts)
+      * ssm projections: inner dim on model
+      * norms / scalars replicated
+    """
+    M = model_axis
+
+    def attn_spec(name: str, shape: tuple[int, ...]) -> P:
+        if name == "wo":  # [H, Dh, D]
+            if _axis_for(shape[0], tp):
+                return P(M, None, None)
+            if cfg.seq_shard:
+                return P()   # replicated compute; FSDP shards storage.
+                             # Row-parallel D-sharding under seq-sharded
+                             # activations makes GSPMD emit partial-logits
+                             # all-reduce [B,K,R,q,k] per layer (measured
+                             # 29.8 TB/chip on yi-34b prefill) — replicated
+                             # weights + sequence-parallel compute is the
+                             # right schedule for indivisible head counts.
+            if _axis_for(shape[2], tp):
+                return P(None, None, M)
+            return P()
+        # wq/wk/wv [D, H_or_K, Dh]
+        if _axis_for(shape[1], tp):
+            return P(None, M, None)
+        if cfg.seq_shard:
+            return P()       # see wo comment
+        if _axis_for(shape[0], tp):
+            return P(M, None, None)
+        return P()
+
+    def spec_for(path: tuple[str, ...], leaf) -> P:
+        # drop integer path parts (stacked list indices shouldn't appear:
+        # blocks are stacked arrays with leading L dim)
+        name = path[-1]
+        parent = path[-2] if len(path) >= 2 else ""
+        shape = leaf.shape
+        stacked = parent in ("attn", "cross", "mlp", "moe", "ssm") and path[0] in (
+            "blocks", "enc_blocks")
+        off = 1 if (path[0] in ("blocks", "enc_blocks")) else 0  # leading L dim
+
+        def pad(spec: P) -> P:
+            return P(*([None] * off), *spec) if off else spec
+
+        if name == "embed":
+            return P(M, None) if _axis_for(shape[0], tp) else (
+                P(None, M) if _axis_for(shape[1], tp) else P())
+        if name == "unembed":
+            if _axis_for(shape[1], tp):
+                return P(None, M)
+            return P(M, None) if _axis_for(shape[0], tp) else P()
+        if name == "enc_pos":
+            return P()
+        if parent in ("attn", "cross") or (parent == "shared_attn" and name in
+                                           ("wq", "wk", "wv", "wo")):
+            return pad(attn_spec(name, shape[off:]))
+        if parent == "mlp" or (parent == "shared_attn" and name in ("w1", "w2", "w3")):
+            if name in ("w1", "w3"):
+                return pad(P(None, M))
+            return pad(P(M, None))
+        if parent == "moe":
+            if name == "router":
+                return pad(P())
+            E = shape[off]
+            if _axis_for(E, tp):
+                return pad(P(M, None, None))
+            return pad(P(None, None, M)) if name in ("w1", "w3") else pad(P(None, M, None))
+        if parent == "ssm":
+            if name in ("in_z", "in_xbc"):
+                return pad(P(None, M))
+            if name == "in_dt":
+                return pad(P(None, M) if _axis_for(shape[off + 1], tp) else P())
+            if name in ("conv_w", "conv_b"):
+                return pad(P(*([None] * (len(shape) - off - 1)), M))
+            if name == "out_proj":
+                return pad(P(M, None))
+            if name == "gate_norm":
+                return pad(P(M) if _axis_for(shape[off], tp) else P())
+            return pad(P(*([None] * (len(shape) - off))))
+        if parent == "vision_proj":
+            return P(None, M) if name == "w" else P(M)
+        # norms, scalars, biases
+        return pad(P(*([None] * (len(shape) - off))))
+
+    tree = abstract_params(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        parts = tuple(_key_str(pp) for pp in path)
+        specs.append(spec_for(parts, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    return str(getattr(p, "name", p))

@@ -1,0 +1,86 @@
+"""Mixture-of-Experts layer (GShard-style capacity dispatch).
+
+Chosen over loop-over-experts or megablocks-style sorting because capacity
+einsum dispatch is (a) fully expressible in pjit-partitionable einsums,
+(b) produces the canonical expert-parallel all-to-all when the expert dim
+is sharded on "model" and tokens on ("pod","data") — the collective the
+roofline analysis wants to see, and (c) has bounded memory:
+dispatch tensor is [groups, group_size, E, C] with C = group_size*top_k/E
+* capacity_factor, i.e. O(tokens * group_size * top_k) bits total.
+
+Top-k routing with softmax-renormalised gates (Mixtral convention), token
+priority by gate weight within a group, dropped tokens pass through the
+residual (standard capacity semantics).  Aux load-balance loss follows
+Shazeer et al.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def moe_params_init(key, cfg, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (D, E), jnp.float32),   # router math in f32
+        "w1": dense_init(k2, (E, D, F), dtype),
+        "w3": dense_init(k3, (E, D, F), dtype),
+        "w2": dense_init(k4, (E, F, D), dtype),
+    }
+
+
+def moe_forward(p: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    mcfg = cfg.moe
+    B, S, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    G_tok = min(mcfg.group_size, B * S)
+    T = B * S
+    assert T % G_tok == 0, f"tokens {T} not divisible by group size {G_tok}"
+    G = T // G_tok
+    C = max(int(G_tok * K * mcfg.capacity_factor) // E, 1)
+
+    xt = x.reshape(G, G_tok, D)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G,S,E]
+
+    # top-k gates, renormalised (Mixtral)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # [G,S,K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (fraction-routed x mean-prob, scaled by E)
+    me = probs.mean(axis=(0, 1))                                 # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        jnp.ones((G * G_tok * K,), jnp.float32)) / (G * G_tok * K)
+    aux = E * jnp.sum(me * ce) * mcfg.aux_loss_weight
+
+    # capacity slots: position of each (token, k) choice in its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)      # [G,S,K,E]
+    flat_choice = onehot.reshape(G, G_tok * K, E)                # priority: token-major
+    pos_in_expert = jnp.cumsum(flat_choice, axis=1) - flat_choice
+    pos_in_expert = pos_in_expert.reshape(G, G_tok, K, E)
+    within_cap = pos_in_expert < C                               # [G,S,K,E]
+    slot = jnp.where(within_cap, pos_in_expert, 0).astype(jnp.int32)
+
+    # [G,S,K,E,C] one-hot of the capacity slot, zeroed for over-capacity and
+    # for non-chosen experts (slot values are garbage there)
+    slot_oh = (jax.nn.one_hot(slot, C, dtype=x.dtype)
+               * within_cap[..., None].astype(x.dtype)
+               * onehot[..., None].astype(x.dtype))
+    dispatch = slot_oh.sum(axis=2)                               # [G,S,E,C]
+    gate_per_e = jnp.einsum("gske,gsk->gse", onehot, gate_vals)  # [G,S,E]
+    combine = dispatch * gate_per_e[..., None].astype(x.dtype)   # [G,S,E,C]
+
+    # expert compute: all-to-all appears when e is model-sharded, g data-sharded
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xt)       # [E,G,C,D]
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("egcd,edf->egcf", expert_in, p["w3"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["w2"])        # [E,G,C,D]
+
+    y = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel form.
+
+Follows Dao & Gu 2024 (arXiv:2405.21060): per-head scalar decay
+``a_t = exp(-softplus(A) * dt_t)``, rank-1 state update
+
+    S_t = a_t * S_{t-1} + dt_t * x_t B_t^T          (S in R^{P x N})
+    y_t = C_t S_t + D * x_t
+
+computed in O(L) via the chunked algorithm: within a chunk of length Q the
+quadratic "attention form" is used (the matmul-heavy part the Pallas
+``ssd_scan`` kernel targets); chunk states are passed with a
+``jax.lax.scan`` — sequence-parallel-friendly and the reason the ssm/hybrid
+archs can run ``long_500k``.
+
+Tensor conventions (B=batch, L=seq, H=heads, P=head_dim, G=BC-groups,
+N=state_dim):  x [B,L,H,P], dt [B,L,H], B/C [B,L,G,N].
+
+The block (mamba2 arch): in_proj -> (z, xBC, dt); causal depthwise conv
+over xBC; SSD; gated RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+# ------------------------------------------------------------------ #
+# core SSD math (pure jnp reference; kernels/ssd_scan mirrors this)
+# ------------------------------------------------------------------ #
+def ssd_chunked(
+    x: jnp.ndarray,      # [B, L, H, P]
+    dt: jnp.ndarray,     # [B, L, H]   (softplus'd, positive)
+    A: jnp.ndarray,      # [H]         (positive decay rates)
+    B_: jnp.ndarray,     # [B, L, G, N]
+    C_: jnp.ndarray,     # [B, L, G, N]
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,   # [B, H, P, N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+    nc = L // chunk
+    rep = H // G
+
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = B_.reshape(Bb, nc, chunk, G, N)
+    Cc = C_.reshape(Bb, nc, chunk, G, N)
+
+    # log-decay within chunk: l[t] = sum_{u<=t} log a_u  (per head)
+    log_a = (-A[None, None, None, :] * dtc).astype(jnp.float32)   # [B,nc,Q,H]
+    cum = jnp.cumsum(log_a, axis=2)                               # [B,nc,Q,H]
+    total = cum[:, :, -1, :]                                      # [B,nc,H]
+
+    # intra-chunk (quadratic) term:
+    # y_t += sum_{u<=t} C_t.B_u * exp(cum_t - cum_u) * dt_u * x_u
+    Bh = jnp.repeat(Bc, rep, axis=3)                              # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bnqhk,bnshk->bnhqs", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))                   # [B,nc,H,Q,S]
+    decay = cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3) - \
+        cum[:, :, None, :, :].transpose(0, 1, 4, 2, 3)            # [B,nc,H,Q,S] = cum_q - cum_s
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gate = jnp.where(causal[None, None, None], jnp.exp(decay), 0.0)
+    weights = scores * gate                                       # [B,nc,H,Q,S]
+    xdt = xc.astype(jnp.float32) * dtc[..., None].astype(jnp.float32)
+    y_intra = jnp.einsum("bnhqs,bnshp->bnqhp", weights, xdt)
+
+    # chunk summary states: S_chunk = sum_u exp(total - cum_u) dt_u x_u B_u^T
+    state_decay = jnp.exp(total[:, :, None, :] - cum)             # [B,nc,Q,H]
+    contrib = jnp.einsum("bnqhp,bnqhk,bnqh->bnhpk", xdt, Bh.astype(jnp.float32),
+                         state_decay)                             # [B,nc,H,P,N]
+
+    # inter-chunk scan: S_{c} = exp(total_c) * S_{c-1} + contrib_c
+    def scan_fn(S_prev, inp):
+        tot_c, contrib_c = inp                                    # [B,H], [B,H,P,N]
+        S = jnp.exp(tot_c)[:, :, None, None] * S_prev + contrib_c
+        return S, S_prev                                          # emit state ENTERING chunk
+
+    S0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((Bb, H, P, N), jnp.float32))
+    final, entering = jax.lax.scan(
+        scan_fn,
+        S0,
+        (jnp.moveaxis(total, 1, 0), jnp.moveaxis(contrib, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)                       # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y_t += C_t S_entering * exp(cum_t)
+    y_inter = jnp.einsum("bnqhk,bnhpk,bnqh->bnqhp", Ch.astype(jnp.float32),
+                         entering, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # [B, H, P, N]
+    x: jnp.ndarray,      # [B, H, P]
+    dt: jnp.ndarray,     # [B, H]
+    A: jnp.ndarray,      # [H]
+    B_: jnp.ndarray,     # [B, G, N]
+    C_: jnp.ndarray,     # [B, G, N]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent update.  Returns (y [B,H,P], new_state)."""
+    H = x.shape[1]
+    G = B_.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=1)     # [B,H,N]
+    Ch = jnp.repeat(C_, rep, axis=1)
+    a = jnp.exp((-A[None, :] * dt).astype(jnp.float32))           # [B,H]
+    upd = jnp.einsum("bhp,bhk,bh->bhpk", x.astype(jnp.float32),
+                     Bh.astype(jnp.float32), dt.astype(jnp.float32))
+    new_state = a[:, :, None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhk,bhpk->bhp", Ch.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ------------------------------------------------------------------ #
+# the mamba2 block
+# ------------------------------------------------------------------ #
+def ssm_dims(cfg) -> dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return {"d_inner": d_inner, "n_heads": n_heads, "conv_dim": conv_dim,
+            "proj_out": 2 * d_inner + 2 * s.n_groups * s.state_dim + n_heads}
+
+
+def ssm_params_init(key, cfg, dtype) -> dict:
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    H = dims["n_heads"]
+    # separate projections (not mamba2's fused in_proj) so each output dim
+    # shards cleanly on the "model" axis -- see DESIGN.md hardware notes
+    return {
+        "in_z": dense_init(k1, (cfg.d_model, dims["d_inner"]), dtype),
+        "in_xbc": dense_init(k5, (cfg.d_model, dims["conv_dim"]), dtype),
+        "in_dt": dense_init(k6, (cfg.d_model, H), dtype),
+        "conv_w": dense_init(k2, (s.conv_width, dims["conv_dim"]), dtype, scale=0.5),
+        "conv_b": jnp.zeros((dims["conv_dim"],), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = exp(A_log) in (0, inf)
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((dims["d_inner"],), dtype),
+        "out_proj": dense_init(k3, (dims["d_inner"], cfg.d_model), dtype),
+    }
+
+
+def _project_in(cfg, p: dict, x: jnp.ndarray):
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    z = x @ p["in_z"]
+    xbc = x @ p["in_xbc"]
+    dt_raw = x @ p["in_dt"]
+    return z, xbc, dt_raw, dims["d_inner"], dims["n_heads"], s.n_groups * s.state_dim
+
+
+def ssm_forward(
+    p: dict, x: jnp.ndarray, cfg, *,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence mamba2 block: x [B,L,D] -> [B,L,D]."""
+    s = cfg.ssm
+    B, L, D = x.shape
+    z, xbc, dt_raw, d_inner, H, gn = _project_in(cfg, p, x)
+
+    # causal depthwise conv over the sequence (width W)
+    xbc = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    P_ = s.head_dim
+    xh = xs.reshape(B, L, H, P_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # [B,L,H]
+    A = jnp.exp(p["A_log"])
+    Bm = B_.reshape(B, L, s.n_groups, s.state_dim)
+    Cm = C_.reshape(B, L, s.n_groups, s.state_dim)
+
+    if use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, _ = ssd_ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk=min(s.chunk, L))
+    y = y + xh * p["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, L, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x [B,L,C], w [W,C] -> [B,L,C] (silu)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(W):  # W=4: unrolled shifts beat conv_general on TPU here
+        out = out + pad[:, t : t + x.shape[1], :] * w[t][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+# ------------------------------------------------------------------ #
+# decode path
+# ------------------------------------------------------------------ #
+def ssm_decode_step(
+    p: dict, x: jnp.ndarray, cfg,
+    conv_cache: jnp.ndarray,   # [B, W-1, conv_dim] (last W-1 inputs)
+    state: jnp.ndarray,        # [B, H, P, N]
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token mamba2 step: x [B,1,D] -> (y [B,1,D], conv_cache, state)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    z, xbc, dt_raw, d_inner, H, gn = _project_in(cfg, p, x[:, 0])
+
+    # rolling conv window
+    W = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_cache, xbc[:, None, :]], axis=1)   # [B,W,C]
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv_cache = window[:, 1:, :]
+
+    xs, B_, C_ = jnp.split(conv, [d_inner, d_inner + gn], axis=-1)
+    xh = xs.reshape(B, H, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # [B,H]
+    A = jnp.exp(p["A_log"])
+    Bm = B_.reshape(B, s.n_groups, s.state_dim)
+    Cm = C_.reshape(B, s.n_groups, s.state_dim)
+
+    y, new_state = ssd_decode_step(state, xh, dt, A, Bm, Cm)
+    y = y + xh * p["D_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(B, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None, :], new_conv_cache, new_state

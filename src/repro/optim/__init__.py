@@ -1,0 +1,9 @@
+"""Optimizers, schedules and gradient transforms (pure JAX, optax-free)."""
+
+from repro.optim.adam import adam, sgd, OptState, Optimizer, global_norm, clip_by_global_norm
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine, exponential_decay
+
+__all__ = [
+    "adam", "sgd", "OptState", "Optimizer", "global_norm", "clip_by_global_norm",
+    "constant", "cosine_decay", "linear_warmup_cosine", "exponential_decay",
+]

@@ -1,0 +1,147 @@
+"""Adam / SGD over arbitrary pytrees.
+
+The paper trains every model with Adam(lr=1e-4) (Appendix C, Table 3).
+optax is not available in this environment, so this module provides a small
+GradientTransformation-flavoured API:
+
+    opt = adam(1e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All functions are jit-safe and shard-transparent: states mirror the param
+tree leaf-for-leaf, so a pjit-sharded param tree yields an identically
+sharded optimizer state (this is what makes the ZeRO-style
+``shard_opt_state`` option in the launcher work with zero extra code).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree        # first moment (zeros tree for sgd)
+    nu: PyTree        # second moment (zeros tree for sgd w/o momentum)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+
+
+def _as_schedule(lr: float | Schedule) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.asarray(0.0)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), tree)
+
+
+def adam(
+    lr: float | Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    clip_norm: float | None = None,
+    mu_dtype: jnp.dtype | None = None,
+) -> Optimizer:
+    """AdamW when weight_decay > 0, vanilla Adam otherwise."""
+    schedule = _as_schedule(lr)
+
+    def init(params: PyTree) -> OptState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=mu_dtype or p.dtype)
+        return OptState(
+            step=jnp.zeros((), dtype=jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads: PyTree, state: OptState, params: PyTree) -> tuple[PyTree, OptState]:
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = schedule(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            m_hat = m_new / bc1
+            v_hat = v_new / bc2
+            delta = m_hat / (jnp.sqrt(v_hat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(
+    lr: float | Schedule,
+    momentum: float = 0.0,
+    nesterov: bool = False,
+    clip_norm: float | None = None,
+) -> Optimizer:
+    schedule = _as_schedule(lr)
+
+    def init(params: PyTree) -> OptState:
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return OptState(step=jnp.zeros((), dtype=jnp.int32), mu=zeros, nu=zeros)
+
+    def update(grads: PyTree, state: OptState, params: PyTree) -> tuple[PyTree, OptState]:
+        if clip_norm is not None:
+            grads = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = schedule(step)
+
+        def upd(g, m):
+            m_new = momentum * m + g
+            d = g + momentum * m_new if nesterov else m_new
+            return -lr_t * d, m_new
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        out = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        updates = treedef.unflatten([o[0].astype(g.dtype) for o, g in zip(out, flat_g)])
+        mu = treedef.unflatten([o[1] for o in out])
+        return updates, OptState(step=step, mu=mu, nu=state.nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)
+
+
+def exponential_decay(lr: float, decay_rate: float, decay_steps: int):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32) * decay_rate ** (
+            step.astype(jnp.float32) / decay_steps
+        )
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, final_fraction: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr, jnp.float32) * (final_fraction + (1 - final_fraction) * cos)
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_fraction: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_fraction)
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.asarray(lr, jnp.float32) * s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return f

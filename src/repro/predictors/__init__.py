@@ -1,0 +1,31 @@
+"""Learned property predictors: Alfabet-S (BDE) and AIMNet-S (IP).
+
+The paper integrates two state-of-the-art predictors: Alfabet (a GNN over
+SMILES-derived graphs predicting per-bond BDE, St. John et al. 2020) and
+AIMNet-NSE (a 3D-conformer network predicting IP, Zubatyuk et al. 2021).
+Neither ships here, so this package provides faithful *small* JAX
+re-implementations of their interfaces ("-S" for surrogate), trained
+against the chemistry oracle (repro.chem.oracle) to the paper's reported
+accuracy envelope (<5% average relative error, §2.2):
+
+``gnn``        Alfabet-S: message-passing GNN, per-atom BDE head, min over
+               O-H oxygens (the paper's "BDE" = lowest O-H BDE).
+``ip_net``     AIMNet-S: atom features + pseudo-conformer geometry, pooled
+               MLP head.  Requires a valid 3D conformer, like the original.
+``cache``      the LRU property cache of §3.6.
+``service``    PropertyService: batched jit inference + cache + the paper's
+               invalid-conformer protocol.
+``training``   dataset building (incl. RL-trajectory augmentation) and the
+               training loops; ``ensure_trained`` caches params on disk.
+"""
+
+from repro.predictors.gnn import AlfabetS
+from repro.predictors.ip_net import AIMNetS
+from repro.predictors.cache import LRUCache
+from repro.predictors.service import PropertyService
+from repro.predictors.training import ensure_trained, train_bde_model, train_ip_model
+
+__all__ = [
+    "AlfabetS", "AIMNetS", "LRUCache", "PropertyService",
+    "ensure_trained", "train_bde_model", "train_ip_model",
+]

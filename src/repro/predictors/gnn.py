@@ -1,0 +1,93 @@
+"""Alfabet-S: a message-passing GNN BDE predictor (the Alfabet stand-in).
+
+Architecture (per St. John et al.'s design, scaled to this problem):
+  * atom embedding: linear(ATOM_FEATURE_DIM -> d)
+  * T message-passing rounds: per-bond-order linear messages, summed over
+    neighbours, gated residual update with layer norm
+  * per-atom BDE head: MLP(d -> d/2 -> 1), interpreted as the BDE of that
+    atom's O-H bond
+  * molecule BDE = min over atoms flagged as O-H oxygens (paper §2.2: "the
+    lowest BDE is found among all O-H bonds")
+
+Pure-functional JAX: ``init(key) -> params``, ``apply(params, batch) ->
+(per_atom_bde, mol_bde)``.  Batch layout comes from
+``repro.chem.molecule.to_graph_arrays``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.chem.molecule import ATOM_FEATURE_DIM, MAX_BOND_ORDER
+
+# normalisation constants for the regression target (kcal/mol)
+BDE_MEAN = 80.0
+BDE_SCALE = 10.0
+_OH_FLAG_CHANNEL = 14  # see to_graph_arrays
+
+
+@dataclass(frozen=True)
+class AlfabetS:
+    hidden: int = 128
+    rounds: int = 3
+
+    # ------------------------------------------------------------ #
+    def init(self, key: jax.Array) -> dict:
+        d = self.hidden
+        k = iter(jax.random.split(key, 6 + 2 * self.rounds * MAX_BOND_ORDER))
+        def dense(key, fan_in, fan_out):
+            w = jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+            return w * (2.0 / fan_in) ** 0.5
+        params = {
+            "embed": {"w": dense(next(k), ATOM_FEATURE_DIM, d), "b": jnp.zeros((d,))},
+            "rounds": [],
+            "head1": {"w": dense(next(k), d, d // 2), "b": jnp.zeros((d // 2,))},
+            "head2": {"w": dense(next(k), d // 2, 1), "b": jnp.zeros((1,))},
+        }
+        for _ in range(self.rounds):
+            params["rounds"].append({
+                "msg": [
+                    {"w": dense(next(k), d, d), "b": jnp.zeros((d,))}
+                    for _ in range(MAX_BOND_ORDER)
+                ],
+                "self": {"w": dense(next(k), d, d), "b": jnp.zeros((d,))},
+                "ln_scale": jnp.ones((d,)),
+                "ln_bias": jnp.zeros((d,)),
+            })
+        return params
+
+    # ------------------------------------------------------------ #
+    def apply(self, params: dict, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """batch: atom_feat [B,A,F], adj [B,A,A,3], mask [B,A].
+
+        Returns (per_atom_bde [B,A], mol_bde [B]) in kcal/mol.  Molecules
+        with no O-H oxygen get ``mol_bde = +inf`` (callers must mask)."""
+        feat, adj, mask = batch["atom_feat"], batch["adj"], batch["mask"]
+        h = feat @ params["embed"]["w"] + params["embed"]["b"]
+        h = h * mask[..., None]
+        for rp in params["rounds"]:
+            msg = jnp.zeros_like(h)
+            for o in range(MAX_BOND_ORDER):
+                m_o = h @ rp["msg"][o]["w"] + rp["msg"][o]["b"]
+                msg = msg + jnp.einsum("bij,bjd->bid", adj[..., o], m_o)
+            upd = msg + (h @ rp["self"]["w"] + rp["self"]["b"])
+            upd = _layer_norm(upd, rp["ln_scale"], rp["ln_bias"])
+            h = (h + jax.nn.relu(upd)) * mask[..., None]
+        z = jax.nn.relu(h @ params["head1"]["w"] + params["head1"]["b"])
+        per_atom = (z @ params["head2"]["w"] + params["head2"]["b"])[..., 0]
+        per_atom = per_atom * BDE_SCALE + BDE_MEAN
+
+        oh = batch["atom_feat"][..., _OH_FLAG_CHANNEL] * mask  # [B,A] 1.0 on O-H oxygens
+        big = jnp.asarray(jnp.inf, per_atom.dtype)
+        masked = jnp.where(oh > 0.5, per_atom, big)
+        mol_bde = jnp.min(masked, axis=-1)
+        return per_atom, mol_bde
+
+
+def _layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale + bias

@@ -1,0 +1,130 @@
+"""PropertyService: the RL loop's view of the two predictors (+ cache).
+
+Responsibilities, mirroring §3.3/§3.6:
+
+* features: molecule -> padded graph arrays (+ pseudo-conformer geometry);
+* batched jit inference with shape bucketing (predictors are shared by all
+  molecules in a worker's modification batch — the paper's stated reason
+  for batched modification);
+* the LRU cache, keyed by isomorphism-invariant hashes;
+* the invalid-conformer protocol: molecules with no valid 3D conformer get
+  ``ip = None`` (the environment maps that to reward -1000);
+* molecules with no O-H bond get ``bde = None`` (protected actions should
+  make this unreachable from valid starts).
+
+``PropertyService.predict`` is the ONLY property entry point the RL core
+uses, so predictor-call counting here gives the §3.6 cache statistics.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.chem.conformer import CONFORMER_FEATURE_DIM, conformer_features, has_valid_conformer
+from repro.chem.molecule import ATOM_FEATURE_DIM, Molecule, to_graph_arrays
+from repro.predictors.cache import LRUCache
+from repro.predictors.gnn import AlfabetS
+from repro.predictors.ip_net import AIMNetS
+
+MAX_ATOMS = 40
+_BUCKETS = (1, 8, 32, 128, 512)
+
+
+def featurize(mol: Molecule, max_atoms: int = MAX_ATOMS) -> dict[str, np.ndarray]:
+    """Graph arrays + conformer features (zeros if conformer invalid)."""
+    arrs = to_graph_arrays(mol, max_atoms)
+    if has_valid_conformer(mol):
+        arrs["conf_feat"] = conformer_features(mol, max_atoms)
+        arrs["conf_valid"] = np.float32(1.0)
+    else:
+        arrs["conf_feat"] = np.zeros((max_atoms, CONFORMER_FEATURE_DIM), dtype=np.float32)
+        arrs["conf_valid"] = np.float32(0.0)
+    return arrs
+
+
+def stack_features(feats: Sequence[dict[str, np.ndarray]]) -> dict[str, np.ndarray]:
+    return {k: np.stack([f[k] for f in feats]) for k in feats[0]}
+
+
+@dataclass
+class Properties:
+    bde: float | None
+    ip: float | None
+
+    @property
+    def conformer_valid(self) -> bool:
+        return self.ip is not None
+
+
+@dataclass
+class PropertyService:
+    bde_model: AlfabetS
+    bde_params: dict
+    ip_model: AIMNetS
+    ip_params: dict
+    max_atoms: int = MAX_ATOMS
+    cache: LRUCache | None = field(default_factory=lambda: LRUCache(200_000))
+
+    # statistics (§3.6)
+    n_predictor_batches: int = 0
+    n_predictor_mols: int = 0
+
+    def __post_init__(self):
+        self._bde_apply = jax.jit(self.bde_model.apply)
+        self._ip_apply = jax.jit(self.ip_model.apply)
+
+    # ------------------------------------------------------------ #
+    def predict(self, mols: Sequence[Molecule]) -> list[Properties]:
+        out: list[Properties | None] = [None] * len(mols)
+        todo: list[int] = []
+        keys = [m.iso_key() for m in mols]
+        for i, key in enumerate(keys):
+            if self.cache is not None:
+                hit = self.cache.get(key)
+                if hit is not None:
+                    out[i] = hit
+                    continue
+            todo.append(i)
+
+        if todo:
+            feats = [featurize(mols[i], self.max_atoms) for i in todo]
+            batch = stack_features(feats)
+            bde_arr, ip_arr = self._run_models(batch)
+            for slot, i in enumerate(todo):
+                mol = mols[i]
+                bde = float(bde_arr[slot]) if mol.has_oh_bond() else None
+                if bde is not None and not np.isfinite(bde):
+                    bde = None
+                ip = float(ip_arr[slot]) if batch["conf_valid"][slot] > 0.5 else None
+                props = Properties(bde=bde, ip=ip)
+                out[i] = props
+                if self.cache is not None:
+                    self.cache.put(keys[i], props)
+        return out  # type: ignore[return-value]
+
+    # ------------------------------------------------------------ #
+    def _run_models(self, batch: dict[str, np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+        """Pad the batch dim to a bucket to bound jit recompiles."""
+        b = batch["atom_feat"].shape[0]
+        padded = _next_bucket(b)
+        if padded != b:
+            batch = {k: np.concatenate(
+                [v, np.zeros((padded - b,) + v.shape[1:], v.dtype)]) for k, v in batch.items()}
+            # padding rows must look like 1-atom dummies to avoid nan paths
+            batch["mask"][b:, 0] = 1.0
+        self.n_predictor_batches += 1
+        self.n_predictor_mols += b
+        _, mol_bde = self._bde_apply(self.bde_params, batch)
+        ip = self._ip_apply(self.ip_params, batch)
+        return np.asarray(mol_bde)[:b], np.asarray(ip)[:b]
+
+
+def _next_bucket(b: int) -> int:
+    for cap in _BUCKETS:
+        if b <= cap:
+            return cap
+    return ((b + 511) // 512) * 512

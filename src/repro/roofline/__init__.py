@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (
+    HW_V5E, collective_bytes_from_hlo, roofline_terms, RooflineReport,
+)
+
+__all__ = ["HW_V5E", "collective_bytes_from_hlo", "roofline_terms", "RooflineReport"]

@@ -1,0 +1,186 @@
+"""Chemistry substrate: invariants, actions, fingerprints, SMILES, oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.chem import (
+    ALLOWED_RING_SIZES, Molecule, enumerate_actions,
+    morgan_fingerprint, IncrementalMorgan, oracle_bde, oracle_ip,
+    has_valid_conformer, sa_score, qed_score, penalized_logp, tanimoto,
+)
+from repro.chem.actions import enumerate_actions_naive
+from repro.chem.fingerprint import batch_morgan_fingerprints, morgan_fingerprint_reference
+from repro.chem.molecule import iso_hash, refine_invariants
+from repro.chem.smiles import canonical_smiles, from_smiles, to_smiles
+
+PHENOL = "C1=CC=CC=C1O"
+BHT_ISH = "CC1=CC(C)=CC(C)=C1O"
+
+
+@pytest.fixture(scope="module")
+def phenol():
+    return from_smiles(PHENOL)
+
+
+@pytest.fixture(scope="module")
+def bht():
+    return from_smiles(BHT_ISH)
+
+
+# ------------------------------------------------------------------ #
+# molecule basics
+# ------------------------------------------------------------------ #
+def test_valences_and_oh(phenol):
+    phenol.check_valences()
+    assert phenol.has_oh_bond()
+    assert phenol.num_atoms == 7
+    assert len(phenol.ring_info()) == 1
+    assert len(phenol.ring_info()[0]) == 6
+
+
+def test_canonical_key_permutation_invariant(bht):
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        perm = rng.permutation(bht.num_atoms)
+        m2 = Molecule(bht.elements[perm], bht.bonds[np.ix_(perm, perm)])
+        assert m2.canonical_key() == bht.canonical_key()
+        assert iso_hash(m2) == iso_hash(bht)
+        assert canonical_smiles(m2) == canonical_smiles(bht)
+
+
+def test_iso_hash_distinguishes(phenol, bht):
+    assert iso_hash(phenol) != iso_hash(bht)
+
+
+def test_largest_fragment(phenol):
+    # break the C-O bond: O falls off, ring is kept
+    i = int(phenol.oh_oxygens()[0])
+    j = int(phenol.neighbors(i)[0])
+    frag = phenol.with_bond_delta(i, j, -1).largest_fragment()
+    assert frag.num_atoms == 6
+    assert not frag.has_oh_bond()
+
+
+# ------------------------------------------------------------------ #
+# actions
+# ------------------------------------------------------------------ #
+def test_actions_match_naive(phenol, bht):
+    for mol in (phenol, bht):
+        fast = {a.result.canonical_key() for a in enumerate_actions(mol)}
+        slow = {a.result.canonical_key() for a in enumerate_actions_naive(mol)}
+        assert fast == slow
+
+
+def test_oh_protection(phenol):
+    for a in enumerate_actions(phenol, protect_oh=True):
+        assert a.result.has_oh_bond(), a
+    unprotected = enumerate_actions(phenol, protect_oh=False)
+    assert any(not a.result.has_oh_bond() for a in unprotected)
+
+
+def test_ring_size_constraint(phenol):
+    for a in enumerate_actions(phenol):
+        for ring in a.result.ring_info():
+            assert len(ring) in ALLOWED_RING_SIZES | {6}
+
+
+def test_no_op_present(phenol):
+    acts = enumerate_actions(phenol)
+    assert acts[0].kind == "no_op"
+    assert acts[0].result is phenol
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**6))
+def test_random_walk_preserves_invariants(seed):
+    rng = np.random.default_rng(seed)
+    mol = from_smiles(PHENOL)
+    for _ in range(4):
+        acts = enumerate_actions(mol, max_atoms=14)
+        a = acts[int(rng.integers(0, len(acts)))]
+        mol = a.result
+        mol.check_valences()
+        assert mol.has_oh_bond()
+        assert mol.num_atoms <= 15
+
+
+# ------------------------------------------------------------------ #
+# fingerprints
+# ------------------------------------------------------------------ #
+def test_incremental_equals_full(bht):
+    inc = IncrementalMorgan(bht)
+    assert np.array_equal(inc.fingerprint(counts=True),
+                          morgan_fingerprint(bht, counts=True))
+    for a in enumerate_actions(bht)[:40]:
+        inc2 = inc.after_action(a.result, a.kind, a.detail)
+        assert np.array_equal(inc2.fingerprint(counts=True),
+                              morgan_fingerprint(a.result, counts=True)), a
+
+
+def test_batch_equals_single(phenol, bht):
+    mols = [a.result for a in enumerate_actions(bht)[:25]] + [phenol]
+    batch = batch_morgan_fingerprints(mols, counts=True)
+    for i, m in enumerate(mols):
+        assert np.array_equal(batch[i], morgan_fingerprint(m, counts=True))
+
+
+def test_fingerprint_permutation_invariant(bht):
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(bht.num_atoms)
+    m2 = Molecule(bht.elements[perm], bht.bonds[np.ix_(perm, perm)])
+    assert np.array_equal(morgan_fingerprint(m2, counts=True),
+                          morgan_fingerprint(bht, counts=True))
+
+
+def test_reference_fingerprint_runs(bht):
+    fp = morgan_fingerprint_reference(bht)
+    assert fp.shape == (2048,) and fp.sum() > 0
+
+
+# ------------------------------------------------------------------ #
+# SMILES
+# ------------------------------------------------------------------ #
+def test_smiles_roundtrip_actions(bht):
+    for a in enumerate_actions(bht):
+        s = canonical_smiles(a.result)
+        m = from_smiles(s)
+        assert m.canonical_key() == a.result.canonical_key(), s
+
+
+def test_smiles_multifragment():
+    assert from_smiles("C.O").num_atoms == 2
+
+
+# ------------------------------------------------------------------ #
+# oracle / properties
+# ------------------------------------------------------------------ #
+def test_oracle_tradeoff_direction(phenol):
+    """Adding an ortho amino group must lower BDE *and* lower IP (§2.1)."""
+    ring_c = int(phenol.neighbors(phenol.oh_oxygens()[0])[0])
+    ortho = [int(v) for v in phenol.neighbors(ring_c) if phenol.symbol(v) == "C"][0]
+    sub = phenol.with_added_atom("N", ortho, 1)
+    assert oracle_bde(sub) < oracle_bde(phenol)
+    assert oracle_ip(sub) < oracle_ip(phenol)
+
+
+def test_oracle_bde_none_without_oh():
+    assert oracle_bde(from_smiles("C1=CC=CC=C1")) is None
+
+
+def test_conformer_validity_rules(phenol):
+    assert has_valid_conformer(phenol)
+    # triple bond in a ring is invalid
+    bad = from_smiles("C1=CC=CC=C1O")
+    bonds = bad.bonds.copy()
+    bonds[1, 2] = bonds[2, 1] = 3
+    m = Molecule(bad.elements, bonds)
+    assert not has_valid_conformer(m)
+
+
+def test_scores_ranges(bht):
+    assert 1.0 <= sa_score(bht) <= 8.0
+    assert 0.0 < qed_score(bht) < 0.95
+    assert penalized_logp(bht) < 5
+    assert tanimoto(bht, bht) == 1.0
+    assert 0.0 <= tanimoto(bht, from_smiles(PHENOL)) < 1.0

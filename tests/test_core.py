@@ -1,0 +1,175 @@
+"""RL core: reward, replay, agent learning, environment, filter, finetune."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.chem.smiles import from_smiles
+from repro.core import (
+    DQNConfig, EnvConfig, INVALID_CONFORMER_REWARD, ReplayBuffer, RewardConfig,
+    Transition, compute_reward, filter_molecules, FilterCriteria,
+)
+from repro.core.agent import DQNAgent, QNetwork
+from repro.core.env import BatchedEnv
+from repro.core.replay import pack_fp, unpack_fp
+from repro.core.reward import gamma_term
+
+PHENOL = from_smiles("C1=CC=CC=C1O")
+BHT = from_smiles("CC1=CC(C)=CC(C)=C1O")
+
+
+# ------------------------------------------------------------------ #
+# reward (Eq. 1)
+# ------------------------------------------------------------------ #
+def test_reward_eq1():
+    cfg = RewardConfig(bde_min=60, bde_max=90, ip_min=100, ip_max=200)
+    r = compute_reward(cfg, bde=60.0, ip=200.0, initial=PHENOL, current=PHENOL, steps_left=0)
+    # nBDE = 0, nIP = 1, gamma = 0 -> r = w2 = 0.2
+    assert abs(r - 0.2) < 1e-9
+    r2 = compute_reward(cfg, bde=90.0, ip=100.0, initial=PHENOL, current=PHENOL, steps_left=0)
+    assert abs(r2 - (-0.8)) < 1e-9
+
+
+def test_reward_invalid_conformer():
+    cfg = RewardConfig()
+    assert compute_reward(cfg, bde=70.0, ip=None, initial=PHENOL, current=PHENOL) \
+        == INVALID_CONFORMER_REWARD
+
+
+def test_gamma_rewards_shrinking():
+    assert gamma_term(BHT, PHENOL) > 0
+    assert gamma_term(PHENOL, BHT) < 0
+    assert gamma_term(PHENOL, PHENOL) == 0
+
+
+# ------------------------------------------------------------------ #
+# replay
+# ------------------------------------------------------------------ #
+def test_pack_unpack_roundtrip():
+    fp = (np.random.default_rng(0).random(2048) > 0.7).astype(np.float32)
+    assert np.array_equal(unpack_fp(pack_fp(fp)), fp)
+
+
+def test_replay_ring_and_sample():
+    buf = ReplayBuffer(capacity=8, seed=0)
+    for i in range(12):
+        fp = np.zeros(2048, np.float32)
+        fp[i % 100] = 1.0
+        buf.add(Transition(pack_fp(fp), 0.5, float(i), i % 2 == 0,
+                           np.stack([pack_fp(fp)]), 0.4))
+    assert len(buf) == 8
+    batch = buf.sample(16, max_candidates=4)
+    assert batch["states"].shape == (16, 2049)
+    assert batch["next_fps"].shape == (16, 4, 2049)
+    # terminal transitions must have empty next mask
+    done_rows = batch["dones"] > 0.5
+    assert np.all(batch["next_mask"][done_rows].sum(-1) == 0)
+
+
+# ------------------------------------------------------------------ #
+# agent
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def small_net():
+    return QNetwork(hidden=(64, 32))
+
+
+def test_agent_learns_synthetic_targets(small_net):
+    """Q(s) must regress toward r for terminal transitions."""
+    agent = DQNAgent(DQNConfig(lr=3e-3), seed=0, network=small_net)
+    rng = np.random.default_rng(0)
+    states = rng.random((64, 2049)).astype(np.float32)
+    rewards = states[:, :10].sum(axis=1)
+    batch = {
+        "states": states, "rewards": rewards,
+        "dones": np.ones(64, np.float32),
+        "next_fps": np.zeros((64, 4, 2049), np.float32),
+        "next_mask": np.zeros((64, 4), np.float32),
+    }
+    first = agent.train_step(batch)
+    for _ in range(200):
+        last = agent.train_step(batch)
+    assert last < first * 0.2, (first, last)
+
+
+def test_epsilon_decay():
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0, epsilon_decay=0.5, epsilon_min=0.1))
+    for _ in range(10):
+        agent.decay_epsilon()
+    assert abs(agent.epsilon - 0.1) < 1e-9
+
+
+def test_greedy_action_selection(small_net):
+    agent = DQNAgent(DQNConfig(epsilon_initial=0.0), seed=0, network=small_net)
+    q = np.array([0.1, 5.0, -1.0])
+    assert agent.select_action(q) == 1
+
+
+# ------------------------------------------------------------------ #
+# environment
+# ------------------------------------------------------------------ #
+class _OracleService:
+    """Deterministic stand-in for PropertyService (oracle-backed)."""
+
+    def __init__(self):
+        from repro.chem.conformer import has_valid_conformer
+        from repro.chem.oracle import oracle_bde, oracle_ip
+        from repro.predictors.service import Properties
+        self._p = Properties
+        self._bde, self._ip, self._ok = oracle_bde, oracle_ip, has_valid_conformer
+
+    def predict(self, mols):
+        return [self._p(bde=self._bde(m),
+                        ip=self._ip(m) if self._ok(m) else None) for m in mols]
+
+
+def test_episode_mechanics(small_net):
+    cfg = EnvConfig(max_steps=3)
+    env = BatchedEnv([PHENOL, BHT], cfg, seed=0)
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1, network=small_net)
+    buf = ReplayBuffer(100, seed=2)
+    service = _OracleService()
+    rcfg = RewardConfig()
+
+    n_steps = 0
+    while not env.done:
+        recs = env.step(agent, service, rcfg, buf)
+        n_steps += 1
+        assert len(recs) == 2
+    assert n_steps == 3
+    # all transitions flushed: 2 molecules x 3 steps (pendings flushed on
+    # next step; terminal ones added immediately)
+    assert len(buf) == 6
+    for m in env.final_molecules():
+        m.check_valences()
+        assert m.has_oh_bond()
+
+
+def test_env_reset_restores_initials():
+    env = BatchedEnv([PHENOL], EnvConfig(max_steps=2), seed=0)
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1, network=QNetwork(hidden=(32,)))
+    env.run_episode(agent, _OracleService(), RewardConfig())
+    env.reset()
+    assert env.slots[0].current.canonical_key() == PHENOL.canonical_key()
+    assert env.slots[0].steps_left == 2
+
+
+# ------------------------------------------------------------------ #
+# filter script (§3.5)
+# ------------------------------------------------------------------ #
+def test_filter_constraints():
+    crit = FilterCriteria(bde_max=76, ip_min=145, sa_max=3.5)
+    res = filter_molecules(
+        [(BHT, 70.0, 150.0), (BHT, 80.0, 150.0), (BHT, 70.0, 120.0),
+         (PHENOL, 70.0, 150.0)],
+        known=[PHENOL], criteria=crit)
+    assert res[0].passed
+    assert "bde_too_high" in res[1].reasons
+    assert "ip_too_low" in res[2].reasons
+    assert "identical_to_known" in res[3].reasons
+
+
+def test_filter_invalid_conformer_reason():
+    res = filter_molecules([(BHT, 70.0, None)], known=[])
+    assert not res[0].passed and "invalid_conformer" in res[0].reasons

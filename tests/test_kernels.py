@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.agent import QNetwork
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_qnet.ops import fused_qnet
+from repro.kernels.fused_qnet.ref import qnet_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ------------------------------------------------------------------ #
+# flash attention
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,Sq,H,K,D", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 4, 4, 128),
+    (2, 256, 8, 1, 64),      # MQA
+    (1, 512, 2, 2, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, Sq, H, K, D, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, Sq, H, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Sq, K, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Sq, K, D)), dtype)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("window,prefix,causal", [
+    (64, 0, True), (None, 32, True), (32, 16, True), (None, 0, False),
+])
+def test_flash_attention_masks(window, prefix, causal):
+    B, S, H, K, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, K, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, K, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, prefix_len=prefix)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                        prefix_len=prefix).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_layer():
+    """The model's jnp attention and the kernel agree."""
+    from repro.models.layers import gqa_attention
+    B, S, H, K, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, K, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, K, D)), jnp.float32)
+    a = gqa_attention(q, k, v, causal=True, q_block=128)
+    b = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------------------------------------------ #
+# ssd scan
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,L,H,P,G,N,chunk", [
+    (2, 256, 4, 32, 1, 16, 64),
+    (1, 128, 2, 64, 2, 32, 128),
+    (2, 512, 8, 16, 1, 8, 128),
+    (1, 64, 4, 16, 4, 64, 32),
+])
+def test_ssd_scan_shapes(B, L, H, P, G, N, chunk):
+    x = jnp.asarray(RNG.standard_normal((B, L, H, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((B, L, H))) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(np.abs(RNG.standard_normal(H)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, L, G, N)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, L, G, N)) * 0.3, jnp.float32)
+    y, s = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_scan_bf16():
+    B, L, H, P, G, N = 1, 128, 2, 32, 1, 16
+    x = jnp.asarray(RNG.standard_normal((B, L, H, P)) * 0.5, jnp.bfloat16)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((B, L, H))) * 0.1 + 0.01, jnp.bfloat16)
+    A = jnp.asarray(np.abs(RNG.standard_normal(H)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, L, G, N)) * 0.3, jnp.bfloat16)
+    Cm = jnp.asarray(RNG.standard_normal((B, L, G, N)) * 0.3, jnp.bfloat16)
+    y, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=64)
+    yr, _ = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_model_ssd_decode_consistency():
+    """chunked scan final state == sequential decode final state."""
+    from repro.models.ssm import ssd_chunked, ssd_decode_step
+    B, L, H, P, G, N = 1, 32, 2, 16, 1, 8
+    x = jnp.asarray(RNG.standard_normal((B, L, H, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((B, L, H))) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(np.abs(RNG.standard_normal(H)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, L, G, N)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, L, G, N)) * 0.3, jnp.float32)
+    _, s_chunked = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    s = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(L):
+        _, s = ssd_decode_step(s, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_chunked), atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# fused qnet
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n", [1, 5, 128, 300])
+def test_fused_qnet_rows(n):
+    params = QNetwork().init(jax.random.PRNGKey(3))
+    x = jnp.asarray((RNG.random((n, 2049)) > 0.8).astype(np.float32))
+    qk = fused_qnet(params, x)
+    qr = qnet_ref(x, [(l["w"], l["b"]) for l in params["layers"]])
+    np.testing.assert_allclose(np.asarray(qk), np.asarray(qr), atol=1e-4, rtol=1e-4)
+
+
+def test_fused_qnet_agrees_with_agent_path():
+    params = QNetwork().init(jax.random.PRNGKey(4))
+    x = jnp.asarray((RNG.random((64, 2049)) > 0.8).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fused_qnet(params, x)),
+                               np.asarray(QNetwork().apply(params, x)),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# hypothesis shape sweeps
+# ------------------------------------------------------------------ #
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    sq=st.sampled_from([64, 128, 192]),
+    k=st.sampled_from([1, 2, 4]),
+    rep=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_hypothesis(b, sq, k, rep, d, causal):
+    h = k * rep
+    rng = np.random.default_rng(b * 1000 + sq + k + d)
+    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((b, sq, k, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, k, d)), jnp.float32)
+    out = flash_attention(q, kk, v, causal=causal)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    l=st.sampled_from([64, 128]),
+    h=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([16, 32]),
+    n=st.sampled_from([8, 16]),
+    chunk=st.sampled_from([32, 64]),
+)
+def test_ssd_scan_hypothesis(l, h, p, n, chunk):
+    rng = np.random.default_rng(l + h * 10 + p + n)
+    x = jnp.asarray(rng.standard_normal((1, l, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((1, l, h))) * 0.1 + 0.01, jnp.float32)
+    A = jnp.asarray(np.abs(rng.standard_normal(h)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((1, l, 1, n)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((1, l, 1, n)) * 0.3, jnp.float32)
+    y, s = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, sr = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=3e-4, rtol=3e-4)

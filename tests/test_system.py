@@ -1,0 +1,109 @@
+"""End-to-end behaviour: the paper's pipeline in miniature.
+
+General-model training on a small molecule set must (a) run the full
+distributed machinery, (b) produce a model whose greedy optimization beats
+a random policy — the qualitative content of Fig. 2 at CPU scale.  Uses
+the REAL trained predictors from .cache/predictors (trains on first run).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
+from repro.core.agent import DQNAgent, QNetwork
+from repro.core.distributed import (
+    DistributedTrainer, greedy_optimize, optimization_failure_rate)
+from repro.data.datasets import antioxidant_dataset, dataset_property_table, train_test_split
+from repro.predictors import PropertyService
+from repro.predictors.training import ensure_trained
+
+
+@pytest.fixture(scope="module")
+def service():
+    bm, bp, im, ip_, metrics = ensure_trained(verbose=False)
+    assert metrics["bde"]["rel_err_mean"] < 0.05, "paper's <5% envelope (§2.2)"
+    assert metrics["ip"]["rel_err_mean"] < 0.05
+    return PropertyService(bm, bp, im, ip_)
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = antioxidant_dataset(64, seed=5)
+    train, test = train_test_split(ds, n_train=8, n_test=4)
+    props = dataset_property_table(train)
+    return train, test, RewardConfig.from_dataset(props["bde"], props["ip"])
+
+
+@pytest.fixture(scope="module")
+def trained(service, data):
+    train, _, rcfg = data
+    cfg = TrainerConfig(
+        n_workers=2, mols_per_worker=4, episodes=12, sync_mode="episode",
+        updates_per_episode=3, train_batch_size=16, max_candidates=32,
+        dqn=DQNConfig(epsilon_decay=0.8), env=EnvConfig(max_steps=4), seed=3)
+    tr = DistributedTrainer(cfg, train, service, rcfg,
+                            network=QNetwork(hidden=(256, 64)))
+    stats = tr.train()
+    return tr, stats
+
+
+def test_training_progresses(trained):
+    tr, stats = trained
+    assert len(stats) == 12
+    assert all(np.isfinite(s["loss"]) for s in stats[2:])
+
+
+def test_general_model_beats_random(trained, service, data):
+    train, _, rcfg = data
+    tr, _ = trained
+    env_cfg = EnvConfig(max_steps=4)
+
+    greedy = greedy_optimize(tr.as_agent(0.0), train, service, rcfg, env_cfg, seed=11)
+    random_recs = greedy_optimize(
+        DQNAgent(DQNConfig(epsilon_initial=1.0), seed=99, network=QNetwork(hidden=(256, 64))),
+        train, service, rcfg, env_cfg, seed=12)
+
+    def mean_reward(recs):
+        return float(np.mean([r.reward for r in recs]))
+
+    assert mean_reward(greedy) > mean_reward(random_recs), (
+        mean_reward(greedy), mean_reward(random_recs))
+
+
+def test_ofr_definition(trained, service, data):
+    train, _, rcfg = data
+    tr, _ = trained
+    recs = greedy_optimize(tr.as_agent(0.0), train, service, rcfg,
+                           EnvConfig(max_steps=4), seed=13)
+    ofr = optimization_failure_rate(recs)
+    assert 0.0 <= ofr <= 1.0
+
+
+def test_cache_hit_rate_nontrivial(service):
+    """§3.6: episodes revisit molecules -> the LRU cache must be earning."""
+    assert service.cache.hit_rate > 0.2, service.cache.hit_rate
+
+
+def test_predictor_service_invalid_conformer(service):
+    from repro.chem.molecule import Molecule
+    # strained: fused 3-rings sharing an edge -> no valid conformer
+    el = np.zeros(5, np.int8)
+    el[4] = 2  # one O for the O-H guarantee
+    b = np.zeros((5, 5), np.int8)
+    for i, j in ((0, 1), (1, 2), (2, 0), (1, 3), (3, 0), (2, 4)):
+        b[i, j] = b[j, i] = 1
+    mol = Molecule(el, b)
+    mol.check_valences()
+    props = service.predict([mol])[0]
+    assert props.ip is None  # -> -1000 reward upstream
+
+
+def test_finetune_runs(trained, service, data):
+    from repro.core.finetune import fine_tune
+    train, test, rcfg = data
+    tr, _ = trained
+    agent = fine_tune(tr.as_agent(0.5), test[0], service, rcfg,
+                      episodes=3, train_batch_size=8, updates_per_episode=1,
+                      max_candidates=16, env_cfg=EnvConfig(max_steps=3), seed=7)
+    recs = greedy_optimize(agent, [test[0]], service, rcfg, EnvConfig(max_steps=3))
+    assert len(recs) == 1 and np.isfinite(recs[0].reward)
