@@ -1,0 +1,105 @@
+"""Fleet-level rollout engine vs the seed sequential per-worker acting.
+
+The refactor's claim: acting costs O(1) jit dispatches and O(1) property
+batches per environment step regardless of worker count, where the seed
+path paid O(W) of each.  For W in {4, 16, 64} this bench rolls identical
+episodes under both paths and reports
+
+* Q-network jit dispatches per environment step (trainer dispatch counter),
+* predictor batches per environment step (``PropertyService`` §3.6 stats;
+  cache disabled so every step predicts),
+* end-to-end steps per second and the fleet/sequential speedup,
+* acting seconds per step (time inside Q evaluation + property prediction
+  only) — candidate enumeration + fingerprinting is identical host work in
+  both paths, so this isolates what the fleet batching actually changes.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, services
+from repro.core import DQNConfig, EnvConfig, TrainerConfig
+from repro.core.agent import QNetwork
+from repro.core.distributed import DistributedTrainer
+from repro.predictors.service import PropertyService
+
+MAX_STEPS = 3
+
+
+def _uncached_service(base: PropertyService) -> PropertyService:
+    """Share the trained predictor params; fresh stats, no LRU cache so the
+    per-step batch counts are structural, not workload-dependent."""
+    return PropertyService(base.bde_model, base.bde_params,
+                           base.ip_model, base.ip_params, cache=None)
+
+
+def _instrument_acting(tr: DistributedTrainer, svc: PropertyService) -> dict:
+    """Accumulate wall time spent in Q evaluation + property prediction
+    (both synchronous: results are converted to numpy before returning)."""
+    acting = {"s": 0.0}
+
+    def timed(fn):
+        def wrapper(*a, **kw):
+            t0 = time.perf_counter()
+            out = fn(*a, **kw)
+            acting["s"] += time.perf_counter() - t0
+            return out
+        return wrapper
+
+    tr._fleet_policy.fleet_q_values = timed(tr._fleet_policy.fleet_q_values)
+    for view in tr._views:
+        view.q_values = timed(view.q_values)
+    svc.predict = timed(svc.predict)
+    return acting
+
+
+def run(scale: str = "quick") -> None:
+    base, train, _, rcfg, _ = services()
+    episodes = 3 if scale == "quick" else 6
+    warmup = 2  # covers the jit shapes the measured episodes revisit
+    net = QNetwork(hidden=(128, 32))
+
+    for W in (4, 16, 64):
+        mols = (train * (W // len(train) + 1))[:W]
+        speed: dict[str, float] = {}
+        acting_per_step: dict[str, float] = {}
+        for mode in ("per_worker", "fleet"):
+            svc = _uncached_service(base)
+            cfg = TrainerConfig(
+                n_workers=W, mols_per_worker=1, episodes=1, sync_mode="episode",
+                rollout=mode, train_batch_size=8, max_candidates=16,
+                dqn=DQNConfig(), env=EnvConfig(max_steps=MAX_STEPS), seed=0)
+            tr = DistributedTrainer(cfg, mols, svc, rcfg, network=net)
+            acting = _instrument_acting(tr, svc)
+
+            for _ in range(warmup):                   # compile both paths' shapes
+                tr.rollout_episode()
+            tr.n_q_dispatches = 0
+            b0, c0 = svc.n_predictor_batches, svc.n_predict_calls
+            acting["s"] = 0.0
+            t0 = time.perf_counter()
+            for _ in range(episodes):
+                tr.rollout_episode()
+            dt = time.perf_counter() - t0
+
+            n_steps = episodes * MAX_STEPS
+            speed[mode] = n_steps / dt
+            emit(f"rollout.w{W}.{mode}.q_dispatches_per_step",
+                 round(tr.n_q_dispatches / n_steps, 2), "calls",
+                 "fleet target: exactly 1" if mode == "fleet" else f"seed path: {W}")
+            emit(f"rollout.w{W}.{mode}.predict_calls_per_step",
+                 round((svc.n_predict_calls - c0) / n_steps, 2), "calls")
+            emit(f"rollout.w{W}.{mode}.predictor_batches_per_step",
+                 round((svc.n_predictor_batches - b0) / n_steps, 2), "calls")
+            emit(f"rollout.w{W}.{mode}.steps_per_s", round(speed[mode], 3), "steps/s")
+            acting_per_step[mode] = acting["s"] / n_steps
+            emit(f"rollout.w{W}.{mode}.acting_ms_per_step",
+                 round(acting_per_step[mode] * 1e3, 1), "ms",
+                 "Q dispatch + property predict only")
+        emit(f"rollout.w{W}.fleet_speedup",
+             round(speed["fleet"] / speed["per_worker"], 2), "x",
+             "fleet engine vs sequential per-worker acting, end to end")
+        emit(f"rollout.w{W}.fleet_acting_speedup",
+             round(acting_per_step["per_worker"] / acting_per_step["fleet"], 2),
+             "x", "batched acting path alone (host chemistry is identical)")

@@ -15,7 +15,7 @@ import traceback
 
 from benchmarks.common import RESULTS, emit, save_results
 
-BENCHES = ("env", "fingerprint", "cache", "models", "properties",
+BENCHES = ("env", "fingerprint", "cache", "rollout", "models", "properties",
            "qed_plogp", "sync_modes", "kernels", "roofline")
 
 

@@ -43,6 +43,11 @@ def main() -> None:
                                  network=QNetwork(hidden=(256, 64)))
     for st in trainer.train(log_every=5):
         pass
+    # acting is fleet-batched: ONE Q dispatch + ONE property batch per step
+    # across all workers (rollout="per_worker" restores the sequential path)
+    print(f"acting: {trainer.n_q_dispatches} Q dispatches for "
+          f"{trainer.engine.n_env_steps} fleet steps, "
+          f"{service.n_predict_calls} property batches")
 
     # 4. greedy optimization with the general model
     agent = trainer.as_agent(epsilon=0.0)

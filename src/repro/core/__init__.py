@@ -14,7 +14,10 @@ Layout:
   reward.py       Eq. 1 + min-max normalisation bounds from the dataset
   agent.py        Q-network (fingerprint MLP), double-DQN loss, eps-greedy
   replay.py       bit-packed replay buffer (fingerprints as packed bits)
-  env.py          single + batched molecule environments
+  rollout.py      fleet-level rollout engine: one Q dispatch + one property
+                  batch per step across ALL workers
+  env.py          single + batched molecule environments (thin single-worker
+                  adapters over the rollout engine)
   distributed.py  the distributed trainer (DDP-style per-step pmean and the
                   paper's episode-boundary sync), shard_map-based
   finetune.py     §3.5 fine-tuning from the general model
@@ -24,6 +27,7 @@ Layout:
 from repro.core.reward import RewardConfig, compute_reward, INVALID_CONFORMER_REWARD
 from repro.core.agent import QNetwork, DQNAgent, DQNConfig
 from repro.core.replay import ReplayBuffer, Transition
+from repro.core.rollout import RolloutEngine, StepRecord, AgentFleetPolicy
 from repro.core.env import MoleculeEnv, BatchedEnv, EnvConfig
 from repro.core.distributed import DistributedTrainer, TrainerConfig
 from repro.core.finetune import fine_tune
@@ -33,6 +37,7 @@ __all__ = [
     "RewardConfig", "compute_reward", "INVALID_CONFORMER_REWARD",
     "QNetwork", "DQNAgent", "DQNConfig",
     "ReplayBuffer", "Transition",
+    "RolloutEngine", "StepRecord", "AgentFleetPolicy",
     "MoleculeEnv", "BatchedEnv", "EnvConfig",
     "DistributedTrainer", "TrainerConfig",
     "fine_tune", "filter_molecules", "FilterCriteria",

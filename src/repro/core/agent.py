@@ -56,6 +56,16 @@ class QNetwork:
                 h = jax.nn.relu(h)
         return h[..., 0]
 
+    def apply_stacked(self, stacked_params: dict, x: jnp.ndarray) -> jnp.ndarray:
+        """Per-worker parameter selection for the fleet rollout engine.
+
+        ``stacked_params`` leaves are ``[W, ...]`` (one parameter tree per
+        worker), ``x`` is ``[W, C, in_dim]`` (worker-major candidate states)
+        -> q ``[W, C]``.  One dispatch evaluates every worker's candidates
+        under that worker's own parameters.
+        """
+        return jax.vmap(self.apply)(stacked_params, x)
+
 
 @dataclass(frozen=True)
 class DQNConfig:
@@ -90,6 +100,7 @@ class DQNAgent:
         self.opt_state: OptState = self.opt.init(self.params)
         self.epsilon = cfg.epsilon_initial
         self._rng = np.random.default_rng(seed + 1)
+        self.n_q_dispatches = 0  # jit dispatches issued for acting
         self._q_fn, self._train_fn = self._build_fns()
 
     # ------------------------------------------------------------ #
@@ -144,6 +155,7 @@ class DQNAgent:
         if padded != n:
             states = np.concatenate(
                 [states, np.zeros((padded - n, states.shape[1]), states.dtype)])
+        self.n_q_dispatches += 1
         q = np.asarray(self._q_fn(self.params, jnp.asarray(states)))
         return q[:n]
 

@@ -21,8 +21,14 @@ updates_per_episode) — the paper's communication-efficiency claim in
 collective-bytes form.
 
 Acting (environment rollout, candidate Q evaluation, property prediction)
-is host-driven and per-worker, exactly like the paper's per-process
-optimisation loop.
+is host-driven.  Since the fleet-level refactor it is batched across ALL
+workers per step through ``repro.core.rollout.RolloutEngine``: one jit'd Q
+dispatch over every worker's candidates (per-worker parameters selected by
+a vmap'd apply over the stacked ``[W, ...]`` tree) and one property batch
+over every worker's chosen successors — O(1) dispatches per step instead
+of O(W).  ``rollout="per_worker"`` keeps the paper's sequential
+per-process loop (same transitions, W dispatches) for comparison; the
+seeded equivalence of the two paths is pinned by tests/test_rollout.py.
 """
 
 from __future__ import annotations
@@ -33,16 +39,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from repro.chem.molecule import Molecule
 from repro.core.agent import DQNAgent, DQNConfig, QNetwork, huber
 from repro.core.env import BatchedEnv, EnvConfig, StepRecord
 from repro.core.replay import ReplayBuffer
+from repro.core.rollout import RolloutEngine
 from repro.core.reward import RewardConfig
 from repro.optim import adam
 from repro.optim.adam import apply_updates
 from repro.predictors.service import PropertyService
+
+try:  # jax >= 0.5: public API, replication check kwarg renamed to check_vma
+    from jax import shard_map as _shard_map
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool | None = None):
+    kwargs = {}
+    if check_rep is not None:
+        kwargs[_SHARD_MAP_CHECK_KW] = check_rep
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
 @dataclass(frozen=True)
@@ -51,6 +71,7 @@ class TrainerConfig:
     mols_per_worker: int = 4          # "Modification Batch" (Table 1)
     episodes: int = 250               # general model (Table 1)
     sync_mode: str = "episode"        # "episode" (DA-MolDQN) | "step" (DDP)
+    rollout: str = "fleet"            # "fleet" (one Q dispatch/step) | "per_worker"
     updates_per_episode: int = 4
     train_batch_size: int = 32        # <= Table 2's 512 cap; CPU-scaled
     max_candidates: int = 64          # replay target max truncation
@@ -61,7 +82,8 @@ class TrainerConfig:
 
 
 class _WorkerView:
-    """Adapter giving BatchedEnv the per-worker agent interface."""
+    """Adapter giving BatchedEnv the per-worker agent interface (the
+    pre-fleet sequential path: one jit dispatch PER WORKER per step)."""
 
     def __init__(self, trainer: "DistributedTrainer", w: int):
         self.t = trainer
@@ -73,14 +95,45 @@ class _WorkerView:
         if padded != n:
             states = np.concatenate(
                 [states, np.zeros((padded - n, states.shape[1]), states.dtype)])
+        self.t.n_q_dispatches += 1
         q = self.t._q_one(self.t.params, jnp.asarray(states), self.w)
         return np.asarray(q)[:n]
 
     def select_action(self, q: np.ndarray) -> int:
-        rng = self.t._worker_rngs[self.w]
-        if rng.random() < self.t.epsilon:
-            return int(rng.integers(0, q.shape[0]))
-        return int(np.argmax(q))
+        return self.t._select_action(q, self.w)
+
+
+class _FleetView:
+    """FleetPolicy over the trainer's stacked per-worker parameters: ONE
+    jit dispatch evaluates every worker's candidates under that worker's
+    own parameters (vmap'd apply, dense ``[W, Cmax, D]`` layout)."""
+
+    def __init__(self, trainer: "DistributedTrainer"):
+        self.t = trainer
+        self._dense: np.ndarray | None = None  # grown to the largest shape seen
+
+    def fleet_q_values(self, per_worker: list[np.ndarray]) -> list[np.ndarray]:
+        counts = [x.shape[0] for x in per_worker]
+        if not any(counts):
+            return [np.zeros((0,), np.float32) for _ in per_worker]
+        # every worker pads to the fleet max: round to a 64 grain — fine
+        # enough that a 130-candidate max doesn't cost W x 256 dense rows
+        # (the coarse power-of-two buckets), coarse enough to keep the jit
+        # shape count small as candidate counts drift between steps
+        cmax = max(64, -(-max(counts) // 64) * 64)
+        if self._dense is None or self._dense.shape[1] < cmax:
+            self._dense = np.zeros(
+                (len(per_worker), cmax, per_worker[0].shape[1]), np.float32)
+        dense = self._dense[:, :cmax]  # jit shape keys off the slice
+        for w, x in enumerate(per_worker):
+            dense[w, : x.shape[0]] = x
+            dense[w, x.shape[0]:] = 0.0  # clear rows left by the last step
+        self.t.n_q_dispatches += 1
+        q = np.asarray(self.t._fleet_q(self.t.params, jnp.asarray(dense)))
+        return [q[w, :n] for w, n in enumerate(counts)]
+
+    def select_action(self, q: np.ndarray, worker: int) -> int:
+        return self.t._select_action(q, worker)
 
 
 class DistributedTrainer:
@@ -112,14 +165,21 @@ class DistributedTrainer:
         if W % nd != 0:
             raise ValueError(f"n_workers={W} must be divisible by mesh size {nd}")
 
-        # per-worker envs + buffers (host side)
-        self.envs = [
-            BatchedEnv(self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker],
-                       cfg.env, seed=cfg.seed + 100 + w)
-            for w in range(W)
-        ]
+        if cfg.rollout not in ("fleet", "per_worker"):
+            raise ValueError(f"rollout must be 'fleet' or 'per_worker', got {cfg.rollout!r}")
+        if cfg.sync_mode not in ("episode", "step"):
+            raise ValueError(f"sync_mode must be 'episode' or 'step', got {cfg.sync_mode!r}")
+
+        # fleet engine over the worker molecule partition: one Q dispatch
+        # and one property batch per step across ALL workers
+        self.engine = RolloutEngine(
+            [self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker]
+             for w in range(W)],
+            cfg.env)
+        self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         self.buffers = [ReplayBuffer(cfg.replay_capacity, seed=cfg.seed + 200 + w) for w in range(W)]
         self._worker_rngs = [np.random.default_rng(cfg.seed + 300 + w) for w in range(W)]
+        self.n_q_dispatches = 0  # acting-side jit dispatches (both paths)
 
         # stacked per-worker params [W, ...] sharded over "data"
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed), W)
@@ -138,7 +198,24 @@ class DistributedTrainer:
         self.epsilon = cfg.dqn.epsilon_initial
         self.episode = 0
         self._views = [_WorkerView(self, w) for w in range(W)]
+        self._fleet_policy = _FleetView(self)
         self._build_fns()
+
+    @property
+    def envs(self) -> list[BatchedEnv]:
+        """Per-worker single-worker envs for the legacy ``per_worker``
+        rollout (and external benchmarks).  Built on first access so the
+        default fleet path doesn't enumerate every initial molecule's
+        candidates twice at construction."""
+        if self._envs is None:
+            cfg = self.cfg
+            self._envs = [
+                BatchedEnv(
+                    self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker],
+                    cfg.env)
+                for w in range(cfg.n_workers)
+            ]
+        return self._envs
 
     # ------------------------------------------------------------ #
     # jit'd compute
@@ -158,7 +235,7 @@ class DistributedTrainer:
             v_next = jnp.where(batch["next_mask"].sum(-1) > 0, v_next, 0.0)
             y = jax.lax.stop_gradient(
                 batch["rewards"] + discount * (1.0 - batch["dones"]) * v_next)
-            return jnp.mean(huber(net.apply(p, batch["states"]) - y))
+            return jnp.mean(huber(q_sa - y))
 
         spec_w = P("data")
 
@@ -198,7 +275,7 @@ class DistributedTrainer:
             ddp_update_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
             out_specs=(spec_w, spec_w, spec_w),
-            check_vma=False,
+            check_rep=False,
         ))
         self._sync = jax.jit(shard_map(
             sync_body, mesh=mesh, in_specs=(spec_w,), out_specs=spec_w,
@@ -210,6 +287,11 @@ class DistributedTrainer:
             return net.apply(p, states)
         self._q_one = q_one
 
+        # fleet acting: [W, C, D] states under the stacked [W, ...] params,
+        # per-worker parameter selection via the vmap'd apply — ONE dispatch
+        # per environment step regardless of n_workers
+        self._fleet_q = jax.jit(net.apply_stacked)
+
     # ------------------------------------------------------------ #
     # training
     # ------------------------------------------------------------ #
@@ -217,10 +299,7 @@ class DistributedTrainer:
         """One paper episode: rollouts on all workers, local training
         updates, then (episode mode) the parameter sync."""
         cfg = self.cfg
-        records: list[list[StepRecord]] = []
-        for w, env in enumerate(self.envs):
-            recs = env.run_episode(self._views[w], self.service, self.reward_cfg, self.buffers[w])
-            records.append(recs)
+        records = self.rollout_episode()
 
         losses = []
         min_fill = min(len(b) for b in self.buffers)
@@ -254,6 +333,39 @@ class DistributedTrainer:
             "epsilon": self.epsilon,
             "invalid_conformer_rate": n_invalid / max(len(flat), 1),
         }
+
+    def rollout_episode(self) -> list[list[StepRecord]]:
+        """One full acting episode for every worker, grouped per worker.
+
+        ``rollout="fleet"`` drives the RolloutEngine: all workers advance
+        in lockstep with one Q dispatch + one property batch per step.
+        ``rollout="per_worker"`` replays the paper's sequential per-process
+        loop.  Both paths draw from the same per-worker RNG streams, so
+        they produce identical transitions (tests/test_rollout.py).
+        """
+        W = self.cfg.n_workers
+        if self.cfg.rollout == "fleet":
+            flat = self.engine.run_episode(
+                self._fleet_policy, self.service, self.reward_cfg, self.buffers)
+            records: list[list[StepRecord]] = [[] for _ in range(W)]
+            for r in flat:
+                records[r.worker].append(r)
+            return records
+        records = []
+        for w, env in enumerate(self.envs):
+            recs = env.run_episode(self._views[w], self.service, self.reward_cfg,
+                                   self.buffers[w])
+            for r in recs:  # single-worker envs stamp worker=0; fix up
+                r.worker = w
+            records.append(recs)
+        return records
+
+    def _select_action(self, q: np.ndarray, w: int) -> int:
+        """Decaying eps-greedy from worker ``w``'s private RNG stream."""
+        rng = self._worker_rngs[w]
+        if rng.random() < self.epsilon:
+            return int(rng.integers(0, q.shape[0]))
+        return int(np.argmax(q))
 
     def _sync_opt(self, opt_state):
         """Average the float moments across workers; keep the int step."""

@@ -1,4 +1,4 @@
-"""Molecule-optimisation environments.
+"""Molecule-optimisation environments — thin adapters over RolloutEngine.
 
 ``MoleculeEnv``  one molecule, MolDQN semantics: every episode restarts
                  from the initial molecule; each step picks one valid edit;
@@ -8,212 +8,79 @@
 ``BatchedEnv``   the paper's *batched modification* (§3.1): a worker owns a
                  batch of molecules and advances them in lockstep — "it
                  will not go to the next step until all molecules in the
-                 current step finished their operations".  The payoff, as
-                 in the paper, is batching: ONE Q-network jit call over all
-                 candidates of all molecules, and ONE property-predictor
-                 call over all chosen successors.
+                 current step finished their operations".
 
-The environment never calls predictors per molecule; the property batch is
-the only predictor entry point (see PropertyService).
+Since the fleet-level refactor both are single-worker views over
+``repro.core.rollout.RolloutEngine``; the slot machinery, the one-Q-call /
+one-property-batch step loop, and replay threading all live there.  The
+environment never calls predictors per molecule; the property batch is the
+only predictor entry point (see PropertyService).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from repro.chem.molecule import Molecule
+from repro.core.replay import ReplayBuffer
+from repro.core.reward import RewardConfig
+from repro.core.rollout import (
+    EnvConfig, RolloutEngine, Slot, StepRecord, as_fleet_policy)
 
-import numpy as np
-
-from repro.chem.actions import Action, enumerate_actions
-from repro.chem.fingerprint import FP_BITS, batch_morgan_fingerprints
-from repro.chem.molecule import ALLOWED_RING_SIZES, Molecule
-from repro.core.agent import DQNAgent
-from repro.core.replay import ReplayBuffer, Transition, pack_fp
-from repro.core.reward import RewardConfig, compute_reward
-from repro.predictors.service import PropertyService
-
-
-@dataclass(frozen=True)
-class EnvConfig:
-    max_steps: int = 10                       # Table 3
-    max_atoms: int = 38
-    allow_removal: bool = True
-    protect_oh: bool = True                   # §3.3
-    allowed_ring_sizes: frozenset = ALLOWED_RING_SIZES
-
-
-@dataclass
-class StepRecord:
-    """What one molecule produced in one environment step."""
-    slot: int
-    molecule: Molecule
-    reward: float
-    done: bool
-    conformer_valid: bool
-    bde: float | None
-    ip: float | None
-
-
-@dataclass(eq=False)
-class _Slot:
-    initial: Molecule
-    current: Molecule
-    steps_left: int
-    candidates: list[Action] = field(default_factory=list)
-    cand_fps: np.ndarray | None = None        # f32[C, FP_BITS] (no steps col)
-    pending: Transition | None = None         # waiting for next-state candidates
-    best: tuple[float, Molecule] | None = None
-
-    def steps_frac(self, cfg: EnvConfig) -> float:
-        return self.steps_left / cfg.max_steps
+__all__ = ["EnvConfig", "StepRecord", "BatchedEnv", "MoleculeEnv"]
 
 
 class BatchedEnv:
-    """Lockstep batch of molecule episodes (one per 'slot')."""
+    """Lockstep batch of molecule episodes (one per 'slot'): a one-worker
+    fleet.  ``agent`` may be anything with ``q_values``/``select_action``
+    (DQNAgent, a trainer worker view) or a full FleetPolicy."""
 
     def __init__(self, molecules: list[Molecule], cfg: EnvConfig = EnvConfig(), seed: int = 0):
+        # ``seed`` is kept for API stability; the environment is
+        # deterministic — action stochasticity lives in the agent's RNG
         self.cfg = cfg
         self.initials = list(molecules)
-        self.slots: list[_Slot] = []
-        self._rng = np.random.default_rng(seed)
-        self.reset()
+        self._engine = RolloutEngine([self.initials], cfg)
 
     # ------------------------------------------------------------ #
+    @property
+    def slots(self) -> list[Slot]:
+        return self._engine.workers[0]
+
     def reset(self) -> None:
-        self.slots = [
-            _Slot(initial=m, current=m, steps_left=self.cfg.max_steps) for m in self.initials
-        ]
-        self._enumerate_all()
+        self._engine.reset()
 
     @property
     def done(self) -> bool:
-        return all(s.steps_left <= 0 for s in self.slots)
-
-    # ------------------------------------------------------------ #
-    def _enumerate_all(self) -> None:
-        """Enumerate candidates + fingerprints for every live slot, and
-        complete any pending transitions with the fresh candidate sets."""
-        todo = [s for s in self.slots if s.steps_left > 0]
-        all_cands: list[Molecule] = []
-        spans: list[tuple[_Slot, int, int]] = []
-        for s in todo:
-            s.candidates = enumerate_actions(
-                s.current,
-                allow_removal=self.cfg.allow_removal,
-                protect_oh=self.cfg.protect_oh,
-                allowed_ring_sizes=self.cfg.allowed_ring_sizes,
-                max_atoms=self.cfg.max_atoms,
-            )
-            spans.append((s, len(all_cands), len(all_cands) + len(s.candidates)))
-            all_cands.extend(a.result for a in s.candidates)
-        if not all_cands:
-            return
-        fps = batch_morgan_fingerprints(all_cands)
-        for s, lo, hi in spans:
-            s.cand_fps = fps[lo:hi]
-            if s.pending is not None:
-                # successor candidates are exactly this step's candidates
-                s.pending.next_fps = np.stack([pack_fp(f) for f in s.cand_fps])
-                s.pending.next_steps_left_frac = (s.steps_left - 1) / self.cfg.max_steps
+        return self._engine.done
 
     # ------------------------------------------------------------ #
     def step(
         self,
-        agent: DQNAgent,
-        service: PropertyService,
+        agent,
+        service,
         reward_cfg: RewardConfig,
         buffer: ReplayBuffer | None = None,
     ) -> list[StepRecord]:
         """One lockstep environment step for every live slot."""
-        live = [s for s in self.slots if s.steps_left > 0]
-        if not live:
-            return []
+        return self._engine.step(
+            as_fleet_policy(agent), service, reward_cfg, [buffer])
 
-        # flush completed pending transitions into the buffer
-        if buffer is not None:
-            for s in live:
-                if s.pending is not None and s.pending.next_fps is not None:
-                    buffer.add(s.pending)
-                    s.pending = None
-
-        # ---- ONE Q call over all candidates of all molecules ---------- #
-        stacked = []
-        for s in live:
-            steps_after = (s.steps_left - 1) / self.cfg.max_steps
-            col = np.full((s.cand_fps.shape[0], 1), steps_after, dtype=np.float32)
-            stacked.append(np.concatenate([s.cand_fps, col], axis=1))
-        lens = [x.shape[0] for x in stacked]
-        q_all = agent.q_values(np.concatenate(stacked, axis=0))
-
-        # ---- per-slot eps-greedy selection ----------------------------- #
-        chosen: list[tuple[_Slot, Action, np.ndarray]] = []
-        off = 0
-        for s, ln in zip(live, lens):
-            q = q_all[off : off + ln]
-            off += ln
-            a_idx = agent.select_action(q)
-            chosen.append((s, s.candidates[a_idx], s.cand_fps[a_idx]))
-
-        # ---- ONE property call over the chosen successors -------------- #
-        props = service.predict([a.result for _, a, _ in chosen])
-
-        records: list[StepRecord] = []
-        for (s, act, fp), pr in zip(chosen, props, strict=True):
-            s.current = act.result
-            s.steps_left -= 1
-            done = s.steps_left <= 0
-            if callable(reward_cfg):
-                # pluggable objective (e.g. QED / PlogP, Appendix D)
-                reward = reward_cfg(pr, s.initial, s.current, s.steps_left)
-            else:
-                reward = compute_reward(
-                    reward_cfg, bde=pr.bde, ip=pr.ip,
-                    initial=s.initial, current=s.current, steps_left=s.steps_left,
-                )
-            if s.best is None or reward > s.best[0]:
-                s.best = (reward, s.current)
-            t = Transition(
-                state_fp=pack_fp(fp),
-                steps_left_frac=s.steps_left / self.cfg.max_steps,
-                reward=reward,
-                done=done,
-                next_fps=np.zeros((0, FP_BITS // 8), dtype=np.uint8),
-                next_steps_left_frac=0.0,
-            )
-            if done:
-                if buffer is not None:
-                    buffer.add(t)            # terminal: no successor needed
-            else:
-                t.next_fps = None            # filled by the next enumerate
-                s.pending = t
-            records.append(StepRecord(
-                slot=self.slots.index(s), molecule=s.current, reward=reward,
-                done=done, conformer_valid=pr.conformer_valid, bde=pr.bde, ip=pr.ip,
-            ))
-
-        self._enumerate_all()
-        return records
-
-    # ------------------------------------------------------------ #
     def run_episode(
         self,
-        agent: DQNAgent,
-        service: PropertyService,
+        agent,
+        service,
         reward_cfg: RewardConfig,
         buffer: ReplayBuffer | None = None,
     ) -> list[StepRecord]:
         """Reset + roll a full episode; returns ALL step records (the
         final step's records are those with ``done=True``)."""
-        self.reset()
-        all_recs: list[StepRecord] = []
-        while not self.done:
-            all_recs.extend(self.step(agent, service, reward_cfg, buffer))
-        return all_recs
+        return self._engine.run_episode(
+            as_fleet_policy(agent), service, reward_cfg, [buffer])
 
     def final_molecules(self) -> list[Molecule]:
-        return [s.current for s in self.slots]
+        return self._engine.final_molecules(worker=0)
 
     def best_molecules(self) -> list[tuple[float, Molecule]]:
-        return [s.best if s.best is not None else (-np.inf, s.current) for s in self.slots]
+        return self._engine.best_molecules(worker=0)
 
 
 class MoleculeEnv(BatchedEnv):

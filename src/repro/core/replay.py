@@ -11,6 +11,7 @@ worker viable — the same engineering pressure the paper's §3.6 reacts to.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Iterable
 
 import numpy as np
 
@@ -53,6 +54,11 @@ class ReplayBuffer:
         else:
             self._items[self._pos] = t
         self._pos = (self._pos + 1) % self.capacity
+
+    def add_many(self, ts: "Iterable[Transition]") -> None:
+        """Insertion-order bulk add (the rollout engine's per-worker flush)."""
+        for t in ts:
+            self.add(t)
 
     def sample(self, batch_size: int, max_candidates: int = 160) -> dict[str, np.ndarray]:
         """Returns dense arrays for the jit'd train step.

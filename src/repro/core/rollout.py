@@ -1,0 +1,308 @@
+"""Fleet-level rollout engine.
+
+The paper's *batched modification* (§3.1) batches the candidates of the
+molecules owned by ONE worker.  ``RolloutEngine`` lifts that one level up:
+the unit of batching is the whole fleet.  Per environment step, across all
+W workers it performs
+
+* one candidate-enumeration + fingerprint pass over every live slot,
+* ONE Q-network jit dispatch over the concatenation of every worker's
+  candidate states (per-worker parameters selected inside the call via a
+  vmap'd apply over the stacked ``[W, ...]`` parameter tree),
+* per-worker epsilon-greedy selection (each worker keeps its own RNG
+  stream, so fleet-stepping reproduces the per-worker sequential rollout
+  transition-for-transition),
+* ONE ``PropertyService.predict`` over all chosen successors fleet-wide
+  (bigger predictor buckets, fewer recompiles),
+* replay-buffer writes threaded through per worker.
+
+Acting cost is therefore O(1) jit dispatches per step instead of O(W).
+``BatchedEnv``/``MoleculeEnv`` (core/env.py) are thin single-worker
+adapters over this engine, so the MolDQN-style APIs keep working.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.chem.actions import Action, enumerate_actions
+from repro.chem.fingerprint import FP_BITS, batch_morgan_fingerprints
+from repro.chem.molecule import ALLOWED_RING_SIZES, Molecule
+from repro.core.replay import ReplayBuffer, Transition, pack_fp
+from repro.core.reward import RewardConfig, compute_reward
+
+STATE_DIM = FP_BITS + 1  # fingerprint ++ steps-left feature
+
+
+@dataclass(frozen=True)
+class EnvConfig:
+    max_steps: int = 10                       # Table 3
+    max_atoms: int = 38
+    allow_removal: bool = True
+    protect_oh: bool = True                   # §3.3
+    allowed_ring_sizes: frozenset = ALLOWED_RING_SIZES
+
+
+@dataclass
+class StepRecord:
+    """What one molecule produced in one environment step."""
+    slot: int
+    molecule: Molecule
+    reward: float
+    done: bool
+    conformer_valid: bool
+    bde: float | None
+    ip: float | None
+    worker: int = 0
+
+
+@dataclass(eq=False)
+class Slot:
+    """One molecule episode; ``index`` is its position in the worker's
+    modification batch (stored once — no identity scans per record)."""
+    worker: int
+    index: int
+    initial: Molecule
+    current: Molecule
+    steps_left: int
+    candidates: list[Action] = field(default_factory=list)
+    cand_fps: np.ndarray | None = None        # f32[C, FP_BITS] (no steps col)
+    pending: Transition | None = None         # waiting for next-state candidates
+    best: tuple[float, Molecule] | None = None
+
+    def steps_frac(self, max_steps: int) -> float:
+        return self.steps_left / max_steps
+
+
+@runtime_checkable
+class FleetPolicy(Protocol):
+    """What the engine needs from the acting side.
+
+    ``fleet_q_values`` receives one stacked state matrix per worker
+    (``f32[N_w, STATE_DIM]``, possibly empty) and must evaluate ALL of
+    them in a single jit dispatch, returning one ``f32[N_w]`` per worker.
+    ``select_action`` draws from the given worker's RNG stream.
+    """
+
+    def fleet_q_values(self, per_worker: Sequence[np.ndarray]) -> list[np.ndarray]: ...
+
+    def select_action(self, q: np.ndarray, worker: int) -> int: ...
+
+
+class AgentFleetPolicy:
+    """Adapts a single-model agent (``q_values``/``select_action``) to the
+    fleet interface: shared parameters, so the fleet call is one flat batch."""
+
+    def __init__(self, agent):
+        self.agent = agent
+
+    def fleet_q_values(self, per_worker: Sequence[np.ndarray]) -> list[np.ndarray]:
+        lens = [x.shape[0] for x in per_worker]
+        flat = np.concatenate([x for x in per_worker if x.shape[0]], axis=0) \
+            if any(lens) else np.zeros((0, STATE_DIM), np.float32)
+        q = self.agent.q_values(flat) if flat.shape[0] else np.zeros((0,), np.float32)
+        out, off = [], 0
+        for ln in lens:
+            out.append(q[off:off + ln])
+            off += ln
+        return out
+
+    def select_action(self, q: np.ndarray, worker: int) -> int:
+        return self.agent.select_action(q)
+
+
+def as_fleet_policy(obj) -> FleetPolicy:
+    if isinstance(obj, FleetPolicy):
+        return obj
+    return AgentFleetPolicy(obj)
+
+
+class RolloutEngine:
+    """Advances W workers' slot batches in lockstep, fleet-batched.
+
+    The engine itself is deterministic: all action stochasticity comes from
+    the policy's per-worker RNG streams (``FleetPolicy.select_action``).
+    """
+
+    def __init__(self, worker_molecules: Sequence[Sequence[Molecule]],
+                 cfg: EnvConfig | None = None):
+        self.cfg = cfg if cfg is not None else EnvConfig()
+        self.worker_initials = [list(ms) for ms in worker_molecules]
+        self.n_workers = len(self.worker_initials)
+        self.workers: list[list[Slot]] = []
+        self.n_env_steps = 0
+        self._enumerated = False
+        self.reset()
+
+    # ------------------------------------------------------------ #
+    def reset(self) -> None:
+        self.workers = [
+            [Slot(worker=w, index=i, initial=m, current=m,
+                  steps_left=self.cfg.max_steps)
+             for i, m in enumerate(ms)]
+            for w, ms in enumerate(self.worker_initials)
+        ]
+        # the enumerate+fingerprint pass is deferred to the first step():
+        # run_episode resets again, and the trainer builds engines it may
+        # never step (rollout="per_worker"), so eager work here is wasted
+        self._enumerated = False
+
+    @property
+    def done(self) -> bool:
+        return all(s.steps_left <= 0 for slots in self.workers for s in slots)
+
+    def _live(self, w: int) -> list[Slot]:
+        return [s for s in self.workers[w] if s.steps_left > 0]
+
+    # ------------------------------------------------------------ #
+    def _enumerate_all(self) -> None:
+        """One candidate-enumeration + ONE fingerprint batch over every live
+        slot of every worker; completes pending transitions with the fresh
+        candidate sets."""
+        todo = [s for slots in self.workers for s in slots if s.steps_left > 0]
+        all_cands: list[Molecule] = []
+        spans: list[tuple[Slot, int, int]] = []
+        for s in todo:
+            s.candidates = enumerate_actions(
+                s.current,
+                allow_removal=self.cfg.allow_removal,
+                protect_oh=self.cfg.protect_oh,
+                allowed_ring_sizes=self.cfg.allowed_ring_sizes,
+                max_atoms=self.cfg.max_atoms,
+            )
+            spans.append((s, len(all_cands), len(all_cands) + len(s.candidates)))
+            all_cands.extend(a.result for a in s.candidates)
+        if not all_cands:
+            return
+        fps = batch_morgan_fingerprints(all_cands)
+        for s, lo, hi in spans:
+            s.cand_fps = fps[lo:hi]
+            if s.pending is not None:
+                # successor candidates are exactly this step's candidates
+                s.pending.next_fps = np.stack([pack_fp(f) for f in s.cand_fps])
+                s.pending.next_steps_left_frac = (s.steps_left - 1) / self.cfg.max_steps
+
+    # ------------------------------------------------------------ #
+    def step(
+        self,
+        policy,
+        service,
+        reward_cfg: RewardConfig,
+        buffers: Sequence[ReplayBuffer | None] | None = None,
+    ) -> list[StepRecord]:
+        """One lockstep step for every live slot of every worker."""
+        policy = as_fleet_policy(policy)
+        if not self._enumerated:
+            self._enumerate_all()
+            self._enumerated = True
+        live_by_worker = [self._live(w) for w in range(self.n_workers)]
+        if not any(live_by_worker):
+            return []
+        self.n_env_steps += 1
+
+        # flush completed pending transitions into the per-worker buffers
+        if buffers is not None:
+            for w, live in enumerate(live_by_worker):
+                buf = buffers[w]
+                if buf is None:
+                    continue
+                ready = [s for s in live
+                         if s.pending is not None and s.pending.next_fps is not None]
+                buf.add_many(s.pending for s in ready)
+                for s in ready:
+                    s.pending = None
+
+        # ---- ONE Q dispatch over all candidates of all workers -------- #
+        per_worker_states: list[np.ndarray] = []
+        for live in live_by_worker:
+            if not live:
+                per_worker_states.append(np.zeros((0, STATE_DIM), np.float32))
+                continue
+            stacked = []
+            for s in live:
+                steps_after = (s.steps_left - 1) / self.cfg.max_steps
+                col = np.full((s.cand_fps.shape[0], 1), steps_after, dtype=np.float32)
+                stacked.append(np.concatenate([s.cand_fps, col], axis=1))
+            per_worker_states.append(np.concatenate(stacked, axis=0))
+        q_by_worker = policy.fleet_q_values(per_worker_states)
+
+        # ---- per-worker eps-greedy selection --------------------------- #
+        chosen: list[tuple[Slot, Action, np.ndarray]] = []
+        for w, live in enumerate(live_by_worker):
+            q_all, off = q_by_worker[w], 0
+            for s in live:
+                ln = s.cand_fps.shape[0]
+                a_idx = policy.select_action(q_all[off:off + ln], w)
+                off += ln
+                chosen.append((s, s.candidates[a_idx], s.cand_fps[a_idx]))
+
+        # ---- ONE property batch over the chosen successors fleet-wide -- #
+        props = service.predict([a.result for _, a, _ in chosen])
+
+        records: list[StepRecord] = []
+        for (s, act, fp), pr in zip(chosen, props, strict=True):
+            s.current = act.result
+            s.steps_left -= 1
+            done = s.steps_left <= 0
+            if callable(reward_cfg):
+                # pluggable objective (e.g. QED / PlogP, Appendix D)
+                reward = reward_cfg(pr, s.initial, s.current, s.steps_left)
+            else:
+                reward = compute_reward(
+                    reward_cfg, bde=pr.bde, ip=pr.ip,
+                    initial=s.initial, current=s.current, steps_left=s.steps_left,
+                )
+            if s.best is None or reward > s.best[0]:
+                s.best = (reward, s.current)
+            t = Transition(
+                state_fp=pack_fp(fp),
+                steps_left_frac=s.steps_left / self.cfg.max_steps,
+                reward=reward,
+                done=done,
+                next_fps=np.zeros((0, FP_BITS // 8), dtype=np.uint8),
+                next_steps_left_frac=0.0,
+            )
+            if done:
+                buf = buffers[s.worker] if buffers is not None else None
+                if buf is not None:
+                    buf.add(t)               # terminal: no successor needed
+            else:
+                t.next_fps = None            # filled by the next enumerate
+                s.pending = t
+            records.append(StepRecord(
+                slot=s.index, molecule=s.current, reward=reward,
+                done=done, conformer_valid=pr.conformer_valid,
+                bde=pr.bde, ip=pr.ip, worker=s.worker,
+            ))
+
+        self._enumerate_all()
+        return records
+
+    # ------------------------------------------------------------ #
+    def run_episode(
+        self,
+        policy,
+        service,
+        reward_cfg: RewardConfig,
+        buffers: Sequence[ReplayBuffer | None] | None = None,
+    ) -> list[StepRecord]:
+        """Reset + roll a full fleet episode; returns ALL step records."""
+        self.reset()
+        all_recs: list[StepRecord] = []
+        while not self.done:
+            all_recs.extend(self.step(policy, service, reward_cfg, buffers))
+        return all_recs
+
+    # ------------------------------------------------------------ #
+    def final_molecules(self, worker: int | None = None) -> list[Molecule]:
+        slots = self.workers[worker] if worker is not None else \
+            [s for ws in self.workers for s in ws]
+        return [s.current for s in slots]
+
+    def best_molecules(self, worker: int | None = None) -> list[tuple[float, Molecule]]:
+        slots = self.workers[worker] if worker is not None else \
+            [s for ws in self.workers for s in ws]
+        return [s.best if s.best is not None else (-np.inf, s.current) for s in slots]

@@ -31,7 +31,7 @@ from repro.predictors.gnn import AlfabetS
 from repro.predictors.ip_net import AIMNetS
 
 MAX_ATOMS = 40
-_BUCKETS = (1, 8, 32, 128, 512)
+_BUCKETS = (1, 8, 32, 64, 128, 512)  # 64: common fleet-wide batch (W workers x 1)
 
 
 def featurize(mol: Molecule, max_atoms: int = MAX_ATOMS) -> dict[str, np.ndarray]:
@@ -70,7 +70,8 @@ class PropertyService:
     cache: LRUCache | None = field(default_factory=lambda: LRUCache(200_000))
 
     # statistics (§3.6)
-    n_predictor_batches: int = 0
+    n_predict_calls: int = 0      # predict() entries (one per env step fleet-wide)
+    n_predictor_batches: int = 0  # jit'd model batches actually run (cache misses)
     n_predictor_mols: int = 0
 
     def __post_init__(self):
@@ -79,6 +80,7 @@ class PropertyService:
 
     # ------------------------------------------------------------ #
     def predict(self, mols: Sequence[Molecule]) -> list[Properties]:
+        self.n_predict_calls += 1
         out: list[Properties | None] = [None] * len(mols)
         todo: list[int] = []
         keys = [m.iso_key() for m in mols]
@@ -91,10 +93,20 @@ class PropertyService:
             todo.append(i)
 
         if todo:
-            feats = [featurize(mols[i], self.max_atoms) for i in todo]
+            # one fleet-wide batch may name the same molecule several times
+            # (e.g. two workers choosing the same successor) — featurize and
+            # predict each distinct iso_key once, fan results back out
+            slot_of: dict = {}
+            unique: list[int] = []
+            for i in todo:
+                if keys[i] not in slot_of:
+                    slot_of[keys[i]] = len(unique)
+                    unique.append(i)
+            feats = [featurize(mols[i], self.max_atoms) for i in unique]
             batch = stack_features(feats)
             bde_arr, ip_arr = self._run_models(batch)
-            for slot, i in enumerate(todo):
+            for i in todo:
+                slot = slot_of[keys[i]]
                 mol = mols[i]
                 bde = float(bde_arr[slot]) if mol.has_oh_bond() else None
                 if bde is not None and not np.isfinite(bde):

@@ -2,7 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # declared in pyproject [test]; degrade to a skip
+    HAVE_HYPOTHESIS = False
 
 from repro.chem import (
     ALLOWED_RING_SIZES, Molecule, enumerate_actions,
@@ -91,18 +96,22 @@ def test_no_op_present(phenol):
     assert acts[0].result is phenol
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10**6))
-def test_random_walk_preserves_invariants(seed):
-    rng = np.random.default_rng(seed)
-    mol = from_smiles(PHENOL)
-    for _ in range(4):
-        acts = enumerate_actions(mol, max_atoms=14)
-        a = acts[int(rng.integers(0, len(acts)))]
-        mol = a.result
-        mol.check_valences()
-        assert mol.has_oh_bond()
-        assert mol.num_atoms <= 15
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10**6))
+    def test_random_walk_preserves_invariants(seed):
+        rng = np.random.default_rng(seed)
+        mol = from_smiles(PHENOL)
+        for _ in range(4):
+            acts = enumerate_actions(mol, max_atoms=14)
+            a = acts[int(rng.integers(0, len(acts)))]
+            mol = a.result
+            mol.check_valences()
+            assert mol.has_oh_bond()
+            assert mol.num_atoms <= 15
+else:
+    def test_random_walk_preserves_invariants():
+        pytest.importorskip("hypothesis")
 
 
 # ------------------------------------------------------------------ #

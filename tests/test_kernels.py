@@ -141,46 +141,55 @@ def test_fused_qnet_agrees_with_agent_path():
 # ------------------------------------------------------------------ #
 # hypothesis shape sweeps
 # ------------------------------------------------------------------ #
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # declared in pyproject [test]; degrade to a skip
+    HAVE_HYPOTHESIS = False
 
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        sq=st.sampled_from([64, 128, 192]),
+        k=st.sampled_from([1, 2, 4]),
+        rep=st.sampled_from([1, 2]),
+        d=st.sampled_from([32, 64]),
+        causal=st.booleans(),
+    )
+    def test_flash_attention_hypothesis(b, sq, k, rep, d, causal):
+        h = k * rep
+        rng = np.random.default_rng(b * 1000 + sq + k + d)
+        q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
+        kk = jnp.asarray(rng.standard_normal((b, sq, k, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, sq, k, d)), jnp.float32)
+        out = flash_attention(q, kk, v, causal=causal)
+        ref = attention_ref(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
 
-@settings(max_examples=10, deadline=None)
-@given(
-    b=st.integers(1, 2),
-    sq=st.sampled_from([64, 128, 192]),
-    k=st.sampled_from([1, 2, 4]),
-    rep=st.sampled_from([1, 2]),
-    d=st.sampled_from([32, 64]),
-    causal=st.booleans(),
-)
-def test_flash_attention_hypothesis(b, sq, k, rep, d, causal):
-    h = k * rep
-    rng = np.random.default_rng(b * 1000 + sq + k + d)
-    q = jnp.asarray(rng.standard_normal((b, sq, h, d)), jnp.float32)
-    kk = jnp.asarray(rng.standard_normal((b, sq, k, d)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((b, sq, k, d)), jnp.float32)
-    out = flash_attention(q, kk, v, causal=causal)
-    ref = attention_ref(q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
-                        v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+    @settings(max_examples=8, deadline=None)
+    @given(
+        l=st.sampled_from([64, 128]),
+        h=st.sampled_from([1, 2, 4]),
+        p=st.sampled_from([16, 32]),
+        n=st.sampled_from([8, 16]),
+        chunk=st.sampled_from([32, 64]),
+    )
+    def test_ssd_scan_hypothesis(l, h, p, n, chunk):
+        rng = np.random.default_rng(l + h * 10 + p + n)
+        x = jnp.asarray(rng.standard_normal((1, l, h, p)) * 0.5, jnp.float32)
+        dt = jnp.asarray(np.abs(rng.standard_normal((1, l, h))) * 0.1 + 0.01, jnp.float32)
+        A = jnp.asarray(np.abs(rng.standard_normal(h)) + 0.5, jnp.float32)
+        Bm = jnp.asarray(rng.standard_normal((1, l, 1, n)) * 0.3, jnp.float32)
+        Cm = jnp.asarray(rng.standard_normal((1, l, 1, n)) * 0.3, jnp.float32)
+        y, s = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+        yr, sr = ssd_ref(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=3e-4, rtol=3e-4)
+else:
+    def test_flash_attention_hypothesis():
+        pytest.importorskip("hypothesis")
 
-
-@settings(max_examples=8, deadline=None)
-@given(
-    l=st.sampled_from([64, 128]),
-    h=st.sampled_from([1, 2, 4]),
-    p=st.sampled_from([16, 32]),
-    n=st.sampled_from([8, 16]),
-    chunk=st.sampled_from([32, 64]),
-)
-def test_ssd_scan_hypothesis(l, h, p, n, chunk):
-    rng = np.random.default_rng(l + h * 10 + p + n)
-    x = jnp.asarray(rng.standard_normal((1, l, h, p)) * 0.5, jnp.float32)
-    dt = jnp.asarray(np.abs(rng.standard_normal((1, l, h))) * 0.1 + 0.01, jnp.float32)
-    A = jnp.asarray(np.abs(rng.standard_normal(h)) + 0.5, jnp.float32)
-    Bm = jnp.asarray(rng.standard_normal((1, l, 1, n)) * 0.3, jnp.float32)
-    Cm = jnp.asarray(rng.standard_normal((1, l, 1, n)) * 0.3, jnp.float32)
-    y, s = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
-    yr, sr = ssd_ref(x, dt, A, Bm, Cm)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4, rtol=3e-4)
-    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=3e-4, rtol=3e-4)
+    def test_ssd_scan_hypothesis():
+        pytest.importorskip("hypothesis")

@@ -1,0 +1,174 @@
+"""Fleet rollout engine: one Q dispatch + one property batch per step,
+seeded equivalence with the seed per-worker sequential path, and the
+PropertyService in-batch dedupe."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chem.smiles import from_smiles
+from repro.core import (
+    DQNAgent, DQNConfig, EnvConfig, ReplayBuffer, RewardConfig, RolloutEngine,
+    TrainerConfig,
+)
+from repro.core.agent import QNetwork
+from repro.core.distributed import DistributedTrainer
+
+MOLS = [from_smiles(s) for s in
+        ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
+
+
+class _OracleService:
+    """Deterministic stand-in for PropertyService (oracle-backed)."""
+
+    def __init__(self):
+        from repro.chem.conformer import has_valid_conformer
+        from repro.chem.oracle import oracle_bde, oracle_ip
+        from repro.predictors.service import Properties
+        self._p, self._bde, self._ip, self._ok = \
+            Properties, oracle_bde, oracle_ip, has_valid_conformer
+        self.n_calls = 0
+
+    def predict(self, mols):
+        self.n_calls += 1
+        return [self._p(bde=self._bde(m), ip=self._ip(m) if self._ok(m) else None)
+                for m in mols]
+
+
+def _trainer(sync_mode: str, rollout: str) -> DistributedTrainer:
+    cfg = TrainerConfig(
+        n_workers=2, mols_per_worker=2, episodes=2, sync_mode=sync_mode,
+        rollout=rollout, updates_per_episode=2, train_batch_size=8,
+        max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
+        env=EnvConfig(max_steps=3), seed=0)
+    return DistributedTrainer(cfg, MOLS, _OracleService(), RewardConfig(),
+                              network=QNetwork(hidden=(64, 32)))
+
+
+def _transitions(buf: ReplayBuffer):
+    return [(t.state_fp.tobytes(), t.steps_left_frac, t.reward, t.done,
+             t.next_fps.tobytes(), t.next_steps_left_frac) for t in buf._items]
+
+
+# ------------------------------------------------------------------ #
+# seeded equivalence: fleet engine == seed per-worker path
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("sync_mode", ["episode", "step"])
+def test_fleet_rollout_matches_per_worker(sync_mode):
+    fleet = _trainer(sync_mode, "fleet")
+    seq = _trainer(sync_mode, "per_worker")
+    for _ in range(2):
+        sf = fleet.train_episode()
+        ss = seq.train_episode()
+        assert sf["mean_final_reward"] == pytest.approx(
+            ss["mean_final_reward"], abs=1e-6)
+        assert sf["loss"] == pytest.approx(ss["loss"], abs=1e-5, nan_ok=True)
+    # per-worker replay buffers hold identical transition streams
+    for bf, bs in zip(fleet.buffers, seq.buffers):
+        assert _transitions(bf) == _transitions(bs)
+    # and the synced parameters agree
+    for xf, xs in zip(jax.tree_util.tree_leaves(fleet.params),
+                      jax.tree_util.tree_leaves(seq.params)):
+        np.testing.assert_allclose(np.asarray(xf), np.asarray(xs), atol=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# O(1) dispatch scaling
+# ------------------------------------------------------------------ #
+def test_fleet_one_q_dispatch_and_one_property_batch_per_step():
+    tr = _trainer("episode", "fleet")
+    tr.engine.reset()
+    steps = 0
+    while not tr.engine.done:
+        q0, p0 = tr.n_q_dispatches, tr.service.n_calls
+        tr.engine.step(tr._fleet_policy, tr.service, tr.reward_cfg, tr.buffers)
+        assert tr.n_q_dispatches == q0 + 1          # regardless of n_workers
+        assert tr.service.n_calls == p0 + 1
+        steps += 1
+    assert steps == tr.cfg.env.max_steps
+
+
+def test_per_worker_path_scales_dispatches_with_workers():
+    tr = _trainer("episode", "per_worker")
+    env = tr.envs[0]
+    env.reset()
+    q0 = tr.n_q_dispatches
+    env.step(tr._views[0], tr.service, tr.reward_cfg, tr.buffers[0])
+    assert tr.n_q_dispatches == q0 + 1  # ... per WORKER, i.e. W per fleet step
+
+
+# ------------------------------------------------------------------ #
+# engine mechanics with a plain single-model agent
+# ------------------------------------------------------------------ #
+def test_engine_multi_worker_with_shared_agent():
+    engine = RolloutEngine([[MOLS[0], MOLS[1]], [MOLS[2], MOLS[3]]],
+                           EnvConfig(max_steps=2))
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    bufs = [ReplayBuffer(100, seed=2), ReplayBuffer(100, seed=3)]
+    recs = engine.run_episode(agent, _OracleService(), RewardConfig(), bufs)
+    assert len(recs) == 2 * 2 * 2                    # W x mols x steps
+    assert {(r.worker, r.slot) for r in recs} == {(0, 0), (0, 1), (1, 0), (1, 1)}
+    assert len(bufs[0]) == 4 and len(bufs[1]) == 4   # all transitions threaded
+    assert agent.n_q_dispatches == 2                 # one per step, fleet-wide
+    for m in engine.final_molecules():
+        m.check_valences()
+        assert m.has_oh_bond()
+
+
+def test_slot_index_is_stored_not_scanned():
+    engine = RolloutEngine([[MOLS[0], MOLS[1]]], EnvConfig(max_steps=2))
+    assert [s.index for s in engine.workers[0]] == [0, 1]
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    recs = engine.step(agent, _OracleService(), RewardConfig())
+    assert [r.slot for r in recs] == [0, 1]
+
+
+# ------------------------------------------------------------------ #
+# fleet-sized fingerprint batches: chunked pass is bit-identical
+# ------------------------------------------------------------------ #
+def test_chunked_fingerprints_bit_identical():
+    from repro.chem.actions import enumerate_actions
+    from repro.chem.fingerprint import batch_morgan_fingerprints
+    cands = [a.result for m in MOLS for a in enumerate_actions(m)]
+    assert len(cands) > 64  # spans several chunks below
+    ref = batch_morgan_fingerprints(cands, chunk=0)
+    for chunk in (17, 64):  # uneven + even chunking, distinct per-chunk m_max
+        np.testing.assert_array_equal(
+            batch_morgan_fingerprints(cands, chunk=chunk), ref)
+    np.testing.assert_array_equal(
+        batch_morgan_fingerprints(cands, counts=True, chunk=31),
+        batch_morgan_fingerprints(cands, counts=True, chunk=0))
+
+
+# ------------------------------------------------------------------ #
+# PropertyService: duplicate molecules in one batch featurize once
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def tiny_service():
+    from repro.predictors.gnn import AlfabetS
+    from repro.predictors.ip_net import AIMNetS
+    from repro.predictors.service import PropertyService
+    bde_model, ip_model = AlfabetS(), AIMNetS()
+    return PropertyService(
+        bde_model, bde_model.init(jax.random.PRNGKey(0)),
+        ip_model, ip_model.init(jax.random.PRNGKey(1)))
+
+
+def test_service_dedupes_within_batch(tiny_service):
+    svc = tiny_service
+    svc.cache.reset_stats()
+    n_mols0 = svc.n_predictor_mols
+    a, b = MOLS[0], MOLS[1]
+    props = svc.predict([a, b, a, a])                # duplicates in ONE batch
+    assert svc.n_predictor_mols == n_mols0 + 2       # featurized a, b once each
+    assert svc.cache.misses == 4 and svc.cache.hits == 0
+    assert props[0].bde == props[2].bde == props[3].bde
+    assert props[0].ip == props[2].ip == props[3].ip
+    # second call is pure cache
+    n_batches = svc.n_predictor_batches
+    props2 = svc.predict([a, b])
+    assert svc.n_predictor_batches == n_batches
+    assert svc.cache.hits == 2
+    assert props2[0].bde == props[0].bde
