@@ -1,30 +1,49 @@
-"""Fleet-level rollout engine vs the seed sequential per-worker acting.
+"""Fleet-level rollout acting paths, scaled to the paper's 512 molecules.
 
-The refactor's claim: acting costs O(1) jit dispatches and O(1) property
-batches per environment step regardless of worker count, where the seed
-path paid O(W) of each.  For W in {4, 16, 64} this bench rolls identical
-episodes under both paths and reports
+Per worker count the bench rolls identical seeded episodes under the acting
+paths and reports
 
-* Q-network jit dispatches per environment step (trainer dispatch counter),
+* Q-network jit dispatches per environment step (fleet target: exactly 1),
 * predictor batches per environment step (``PropertyService`` §3.6 stats;
   cache disabled so every step predicts),
-* end-to-end steps per second and the fleet/sequential speedup,
-* acting seconds per step (time inside Q evaluation + property prediction
-  only) — candidate enumeration + fingerprinting is identical host work in
-  both paths, so this isolates what the fleet batching actually changes.
+* XLA recompiles during the measured episodes (``RecompileCounter``; the
+  shape-discipline claim is that this is ZERO after warmup — at any W),
+* end-to-end steps per second and the speedup of the new pipelined+sharded
+  path over the PR-1 fleet engine,
+* acting seconds per step (time inside Q evaluation + property prediction).
+
+W=64 still includes the seed sequential per-worker path; at W in {256, 512}
+it would be pathologically slow (W dispatches + W predictor batches per
+step), so only the PR-1 ``fleet`` engine and the new ``fleet_pipelined``
+(sharded dispatch + overlapped chemistry) path are compared.
+
+``python benchmarks/bench_rollout.py --smoke`` runs the CI gate: W=16,
+pipelined path, randomly-initialised predictors (no training needed), and
+FAILS if any XLA compile happens after warmup or the dispatch count is not
+exactly one per step.
 """
 
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+if __package__ in (None, ""):  # `python benchmarks/bench_rollout.py --smoke`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import emit, services
 from repro.core import DQNConfig, EnvConfig, TrainerConfig
 from repro.core.agent import QNetwork
 from repro.core.distributed import DistributedTrainer
+from repro.core.jit_stats import RecompileCounter
 from repro.predictors.service import PropertyService
 
 MAX_STEPS = 3
+# modes per worker count: the sequential path only where it is affordable
+PLANS = ((64, ("per_worker", "fleet", "fleet_pipelined")),
+         (256, ("fleet", "fleet_pipelined")),
+         (512, ("fleet", "fleet_pipelined")))
 
 
 def _uncached_service(base: PropertyService) -> PropertyService:
@@ -48,58 +67,154 @@ def _instrument_acting(tr: DistributedTrainer, svc: PropertyService) -> dict:
         return wrapper
 
     tr._fleet_policy.fleet_q_values = timed(tr._fleet_policy.fleet_q_values)
+    tr._fleet_policy_sharded.fleet_q_values = timed(
+        tr._fleet_policy_sharded.fleet_q_values)
     for view in tr._views:
         view.q_values = timed(view.q_values)
     svc.predict = timed(svc.predict)
     return acting
 
 
+def _measure(tr: DistributedTrainer, svc: PropertyService, counter,
+             warmup: int, episodes: int) -> dict:
+    """Warm up (jit shapes + capacity reserve), then measure."""
+    acting = _instrument_acting(tr, svc)
+    for _ in range(warmup):
+        tr.rollout_episode()
+    # reserve one ladder rung of headroom past the warmup high-water mark so
+    # candidate-count drift in the measured episodes cannot grow the shape
+    if tr.candidate_capacity:
+        tr.reserve_candidates(int(tr.candidate_capacity * 1.3))
+
+    tr.n_q_dispatches = 0
+    b0, c0 = svc.n_predictor_batches, svc.n_predict_calls
+    acting["s"] = 0.0
+    mark = counter.count
+    t0 = time.perf_counter()
+    for _ in range(episodes):
+        tr.rollout_episode()
+    dt = time.perf_counter() - t0
+
+    n_steps = episodes * MAX_STEPS
+    return {
+        "steps_per_s": n_steps / dt,
+        "q_dispatches_per_step": tr.n_q_dispatches / n_steps,
+        "predict_calls_per_step": (svc.n_predict_calls - c0) / n_steps,
+        "predictor_batches_per_step": (svc.n_predictor_batches - b0) / n_steps,
+        "acting_s_per_step": acting["s"] / n_steps,
+        "recompiles": counter.delta_since(mark),
+    }
+
+
+def _trainer(W: int, mode: str, mols, svc, rcfg, net) -> DistributedTrainer:
+    cfg = TrainerConfig(
+        n_workers=W, mols_per_worker=1, episodes=1, sync_mode="episode",
+        rollout=mode, train_batch_size=8, max_candidates=16,
+        dqn=DQNConfig(), env=EnvConfig(max_steps=MAX_STEPS), seed=0)
+    return DistributedTrainer(cfg, mols, svc, rcfg, network=net)
+
+
 def run(scale: str = "quick") -> None:
+    counter = RecompileCounter.install()
     base, train, _, rcfg, _ = services()
-    episodes = 3 if scale == "quick" else 6
     warmup = 2  # covers the jit shapes the measured episodes revisit
     net = QNetwork(hidden=(128, 32))
 
-    for W in (4, 16, 64):
+    for W, modes in PLANS:
+        # small-W episodes are cheap: buy variance reduction where it costs
+        # little (a 6-step sample on a shared box is hopelessly noisy)
+        episodes = (6 if W <= 64 else 2) if scale == "quick" else (10 if W <= 64 else 4)
         mols = (train * (W // len(train) + 1))[:W]
         speed: dict[str, float] = {}
         acting_per_step: dict[str, float] = {}
-        for mode in ("per_worker", "fleet"):
+        for mode in modes:
             svc = _uncached_service(base)
-            cfg = TrainerConfig(
-                n_workers=W, mols_per_worker=1, episodes=1, sync_mode="episode",
-                rollout=mode, train_batch_size=8, max_candidates=16,
-                dqn=DQNConfig(), env=EnvConfig(max_steps=MAX_STEPS), seed=0)
-            tr = DistributedTrainer(cfg, mols, svc, rcfg, network=net)
-            acting = _instrument_acting(tr, svc)
-
-            for _ in range(warmup):                   # compile both paths' shapes
-                tr.rollout_episode()
-            tr.n_q_dispatches = 0
-            b0, c0 = svc.n_predictor_batches, svc.n_predict_calls
-            acting["s"] = 0.0
-            t0 = time.perf_counter()
-            for _ in range(episodes):
-                tr.rollout_episode()
-            dt = time.perf_counter() - t0
-
-            n_steps = episodes * MAX_STEPS
-            speed[mode] = n_steps / dt
+            tr = _trainer(W, mode, mols, svc, rcfg, net)
+            m = _measure(tr, svc, counter, warmup, episodes)
+            speed[mode] = m["steps_per_s"]
+            acting_per_step[mode] = m["acting_s_per_step"]
             emit(f"rollout.w{W}.{mode}.q_dispatches_per_step",
-                 round(tr.n_q_dispatches / n_steps, 2), "calls",
-                 "fleet target: exactly 1" if mode == "fleet" else f"seed path: {W}")
+                 round(m["q_dispatches_per_step"], 2), "calls",
+                 f"seed path: {W}" if mode == "per_worker" else "fleet target: exactly 1")
             emit(f"rollout.w{W}.{mode}.predict_calls_per_step",
-                 round((svc.n_predict_calls - c0) / n_steps, 2), "calls")
+                 round(m["predict_calls_per_step"], 2), "calls")
             emit(f"rollout.w{W}.{mode}.predictor_batches_per_step",
-                 round((svc.n_predictor_batches - b0) / n_steps, 2), "calls")
-            emit(f"rollout.w{W}.{mode}.steps_per_s", round(speed[mode], 3), "steps/s")
-            acting_per_step[mode] = acting["s"] / n_steps
+                 round(m["predictor_batches_per_step"], 2), "calls")
+            emit(f"rollout.w{W}.{mode}.recompiles_after_warmup",
+                 m["recompiles"], "compiles", "shape discipline target: 0")
+            emit(f"rollout.w{W}.{mode}.steps_per_s",
+                 round(m["steps_per_s"], 3), "steps/s")
             emit(f"rollout.w{W}.{mode}.acting_ms_per_step",
-                 round(acting_per_step[mode] * 1e3, 1), "ms",
+                 round(m["acting_s_per_step"] * 1e3, 1), "ms",
                  "Q dispatch + property predict only")
-        emit(f"rollout.w{W}.fleet_speedup",
-             round(speed["fleet"] / speed["per_worker"], 2), "x",
-             "fleet engine vs sequential per-worker acting, end to end")
-        emit(f"rollout.w{W}.fleet_acting_speedup",
-             round(acting_per_step["per_worker"] / acting_per_step["fleet"], 2),
-             "x", "batched acting path alone (host chemistry is identical)")
+        if "per_worker" in speed:
+            emit(f"rollout.w{W}.fleet_speedup",
+                 round(speed["fleet"] / speed["per_worker"], 2), "x",
+                 "fleet engine vs sequential per-worker acting, end to end")
+        emit(f"rollout.w{W}.pipelined_speedup",
+             round(speed["fleet_pipelined"] / speed["fleet"], 2), "x",
+             "pipelined+sharded path vs the PR-1 fleet engine, end to end")
+        emit(f"rollout.w{W}.pipelined_acting_speedup",
+             round(acting_per_step["fleet"] / acting_per_step["fleet_pipelined"], 2),
+             "x", "overlapped chemistry hides part of the property batch")
+
+
+# ------------------------------------------------------------------ #
+# CI smoke gate: zero recompiles after warmup on the pipelined path
+# ------------------------------------------------------------------ #
+def smoke(W: int = 16) -> None:
+    """Fast, training-free shape-discipline gate (random predictor params:
+    recompile behaviour only depends on shapes, not weights)."""
+    import jax
+
+    from repro.core import RewardConfig
+    from repro.data.datasets import antioxidant_dataset, dataset_property_table
+    from repro.predictors.gnn import AlfabetS
+    from repro.predictors.ip_net import AIMNetS
+
+    counter = RecompileCounter.install()
+    bde_model, ip_model = AlfabetS(), AIMNetS()
+    svc = PropertyService(bde_model, bde_model.init(jax.random.PRNGKey(0)),
+                          ip_model, ip_model.init(jax.random.PRNGKey(1)),
+                          cache=None)
+    mols = antioxidant_dataset(W)
+    props = dataset_property_table(mols)
+    rcfg = RewardConfig.from_dataset(props["bde"], props["ip"])
+    tr = _trainer(W, "fleet_pipelined", mols, svc, rcfg, QNetwork(hidden=(64, 32)))
+
+    mark0 = counter.count
+    m = _measure(tr, svc, counter, warmup=2, episodes=2)
+    warmup_compiles = counter.count - mark0 - m["recompiles"]
+
+    emit(f"rollout.smoke.w{W}.warmup_compiles", warmup_compiles, "compiles")
+    emit(f"rollout.smoke.w{W}.recompiles_after_warmup", m["recompiles"],
+         "compiles", "gate: must be 0")
+    emit(f"rollout.smoke.w{W}.q_dispatches_per_step",
+         round(m["q_dispatches_per_step"], 2), "calls", "gate: must be 1.0")
+    if warmup_compiles <= 0:
+        raise SystemExit("smoke self-check failed: warmup compiled nothing — "
+                         "the recompile counter is not observing this process")
+    if m["recompiles"] != 0:
+        raise SystemExit(
+            f"FAIL: {m['recompiles']} XLA compile(s) during measured episodes "
+            f"(shape discipline broken on the pipelined path)")
+    if m["q_dispatches_per_step"] != 1.0:
+        raise SystemExit(
+            f"FAIL: {m['q_dispatches_per_step']} Q dispatches/step (expected 1)")
+    print(f"SMOKE PASS: W={W}, {warmup_compiles} warmup compiles, "
+          f"0 recompiles after warmup, 1 Q dispatch/step")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: W=16 pipelined path, fail on recompiles")
+    ap.add_argument("--w", type=int, default=16, help="smoke worker count")
+    ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.w)
+    else:
+        run(args.scale)

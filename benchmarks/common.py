@@ -24,9 +24,19 @@ def timer():
 
 
 def save_results(path: str = "experiments/bench/results.json") -> None:
+    """Merge this run's metrics into the results file (a partial run — e.g.
+    ``--only rollout`` — must not clobber the other benches' entries)."""
     os.makedirs(os.path.dirname(path), exist_ok=True)
+    merged: dict[str, dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    merged.update(RESULTS)
     with open(path, "w") as f:
-        json.dump(RESULTS, f, indent=2, default=str)
+        json.dump(merged, f, indent=2, default=str)
 
 
 def services():

@@ -199,19 +199,22 @@ class Molecule:
                 j = int(j)
                 if j <= i:
                     continue
-                # shortest i->j path avoiding the (i, j) bond
-                saved = self.bonds[i, j]
-                self.bonds[i, j] = self.bonds[j, i] = 0
-                path = self._bfs_path(i, j)
-                self.bonds[i, j] = self.bonds[j, i] = saved
+                # shortest i->j path avoiding the (i, j) bond.  The bond is
+                # EXCLUDED in the traversal, never zeroed on self.bonds: the
+                # pipelined rollout reads molecules from host threads while
+                # the property path calls ring_info(), so even a
+                # restored-immediately mutation here is a data race.
+                path = self._bfs_path(i, j, skip_edge=(i, j))
                 if path is not None:
                     key = frozenset(path)
                     if key not in rings or len(path) < len(rings[key]):
                         rings[key] = path
         return list(rings.values())
 
-    def _bfs_path(self, src: int, dst: int) -> list[int] | None:
+    def _bfs_path(self, src: int, dst: int,
+                  skip_edge: tuple[int, int] | None = None) -> list[int] | None:
         n = self.num_atoms
+        a, b = skip_edge if skip_edge is not None else (-1, -1)
         prev = np.full(n, -2, dtype=np.int32)
         prev[src] = -1
         q = deque([src])
@@ -223,9 +226,12 @@ class Molecule:
                     path.append(int(prev[path[-1]]))
                 return path[::-1]
             for v in np.nonzero(self.bonds[u])[0]:
+                v = int(v)
+                if (u == a and v == b) or (u == b and v == a):
+                    continue
                 if prev[v] == -2:
                     prev[v] = u
-                    q.append(int(v))
+                    q.append(v)
         return None
 
     def atom_ring_membership(self) -> np.ndarray:

@@ -22,6 +22,7 @@ Layout:
                   paper's episode-boundary sync), shard_map-based
   finetune.py     §3.5 fine-tuning from the general model
   filter.py       §3.5 filter script
+  jit_stats.py    XLA recompile accounting for the acting hot path
 """
 
 from repro.core.reward import RewardConfig, compute_reward, INVALID_CONFORMER_REWARD
@@ -29,7 +30,7 @@ from repro.core.agent import QNetwork, DQNAgent, DQNConfig
 from repro.core.replay import ReplayBuffer, Transition
 from repro.core.rollout import RolloutEngine, StepRecord, AgentFleetPolicy
 from repro.core.env import MoleculeEnv, BatchedEnv, EnvConfig
-from repro.core.distributed import DistributedTrainer, TrainerConfig
+from repro.core.distributed import DistributedTrainer, TrainerConfig, ROLLOUT_MODES
 from repro.core.finetune import fine_tune
 from repro.core.filter import filter_molecules, FilterCriteria
 
@@ -39,6 +40,6 @@ __all__ = [
     "ReplayBuffer", "Transition",
     "RolloutEngine", "StepRecord", "AgentFleetPolicy",
     "MoleculeEnv", "BatchedEnv", "EnvConfig",
-    "DistributedTrainer", "TrainerConfig",
+    "DistributedTrainer", "TrainerConfig", "ROLLOUT_MODES",
     "fine_tune", "filter_molecules", "FilterCriteria",
 ]

@@ -201,3 +201,33 @@ def _bucket(n: int, sizes=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
         if n <= s:
             return s
     return ((n + 4095) // 4096) * 4096
+
+
+def candidate_capacity_table(n_workers: int, max_candidates: int = 1024,
+                             *, grain: int = 32) -> tuple[int, ...]:
+    """Padded candidate-axis capacities for the dense ``[W, C, D]`` fleet
+    Q batch (``QNetwork.apply_stacked``).
+
+    Each padded candidate row costs ``W x D`` floats, so the rung ratio
+    shrinks as the fleet grows: 2x rungs up to W=64 (recompiles are the
+    scarce resource), 1.5x up to W=256, 1.25x beyond — at W=512 the dense
+    batch never pads the candidate axis more than ~25% past the fleet's
+    observed max.  Combined with the sticky high-water buffer in the fleet
+    view (capacity only ever grows), jit shapes change O(log C) times per
+    run instead of every time the per-step max drifts across a grain line.
+    """
+    ratio = 2.0 if n_workers <= 64 else 1.5 if n_workers <= 256 else 1.25
+    caps, c = [], grain
+    while c < max_candidates:
+        caps.append(c)
+        c = max(c + grain, grain * round(c * ratio / grain))
+    caps.append(c)
+    return tuple(caps)
+
+
+def candidate_capacity(n: int, table: tuple[int, ...]) -> int:
+    """Smallest rung >= n (grain-rounded past the table's end)."""
+    for cap in table:
+        if n <= cap:
+            return cap
+    return 32 * -(-n // 32)

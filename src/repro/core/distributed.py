@@ -26,9 +26,22 @@ workers per step through ``repro.core.rollout.RolloutEngine``: one jit'd Q
 dispatch over every worker's candidates (per-worker parameters selected by
 a vmap'd apply over the stacked ``[W, ...]`` tree) and one property batch
 over every worker's chosen successors — O(1) dispatches per step instead
-of O(W).  ``rollout="per_worker"`` keeps the paper's sequential
-per-process loop (same transitions, W dispatches) for comparison; the
-seeded equivalence of the two paths is pinned by tests/test_rollout.py.
+of O(W).  Four acting paths, all pinned seeded-transition-identical by
+tests/test_rollout.py:
+
+* ``rollout="per_worker"``      the paper's sequential per-process loop
+                                (W dispatches/step) — kept for comparison;
+* ``rollout="fleet"``           one vmap'd Q dispatch per step (PR-1 path);
+* ``rollout="fleet_sharded"``   the same dispatch through ``shard_map``
+                                over the mesh "data" axis: each device
+                                evaluates only its resident workers'
+                                ``[W/nd, C, D]`` slice under its resident
+                                ``[W/nd, ...]`` params (no collective —
+                                acting is embarrassingly data-parallel);
+* ``rollout="fleet_pipelined"`` the sharded dispatch + the engine's
+                                double-buffered step: step t+1's candidate
+                                enumeration/fingerprinting overlaps step
+                                t's property batch (the 512-worker path).
 """
 
 from __future__ import annotations
@@ -41,11 +54,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.chem.molecule import Molecule
-from repro.core.agent import DQNAgent, DQNConfig, QNetwork, huber
+from repro.core.agent import (
+    DQNAgent, DQNConfig, QNetwork, candidate_capacity, candidate_capacity_table,
+    huber,
+)
 from repro.core.env import BatchedEnv, EnvConfig, StepRecord
 from repro.core.replay import ReplayBuffer
-from repro.core.rollout import RolloutEngine
+from repro.core.rollout import STATE_DIM, RolloutEngine
 from repro.core.reward import RewardConfig
+from repro.launch.mesh import fleet_sharding
 from repro.optim import adam
 from repro.optim.adam import apply_updates
 from repro.predictors.service import PropertyService
@@ -65,17 +82,22 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool | None = None):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
+ROLLOUT_MODES = ("fleet", "fleet_sharded", "fleet_pipelined", "per_worker")
+_FLEET_MODES = ("fleet", "fleet_sharded", "fleet_pipelined")
+
+
 @dataclass(frozen=True)
 class TrainerConfig:
     n_workers: int = 4
     mols_per_worker: int = 4          # "Modification Batch" (Table 1)
     episodes: int = 250               # general model (Table 1)
     sync_mode: str = "episode"        # "episode" (DA-MolDQN) | "step" (DDP)
-    rollout: str = "fleet"            # "fleet" (one Q dispatch/step) | "per_worker"
+    rollout: str = "fleet"            # see ROLLOUT_MODES (module docstring)
     updates_per_episode: int = 4
     train_batch_size: int = 32        # <= Table 2's 512 cap; CPU-scaled
     max_candidates: int = 64          # replay target max truncation
     replay_capacity: int = 4000       # Table 3
+    pipeline_threads: int | None = None  # fleet_pipelined host pool (None: auto)
     dqn: DQNConfig = field(default_factory=lambda: DQNConfig(epsilon_decay=0.97))
     env: EnvConfig = field(default_factory=EnvConfig)
     seed: int = 0
@@ -106,30 +128,49 @@ class _WorkerView:
 class _FleetView:
     """FleetPolicy over the trainer's stacked per-worker parameters: ONE
     jit dispatch evaluates every worker's candidates under that worker's
-    own parameters (vmap'd apply, dense ``[W, Cmax, D]`` layout)."""
+    own parameters (vmap'd apply, dense ``[W, Cmax, D]`` layout).
 
-    def __init__(self, trainer: "DistributedTrainer"):
+    The candidate axis is padded to a rung of the fleet-adaptive capacity
+    ladder (``candidate_capacity_table``) and the dense buffer is a STICKY
+    high-water mark: capacity only ever grows, and the jit always sees the
+    full buffer, so shapes change O(log C) times per run instead of every
+    time the per-step max drifts — the property that keeps W=512 free of
+    per-step recompiles.  With ``sharded=True`` the dispatch goes through
+    the ``shard_map`` fleet fn with the batch placed on the mesh's "data"
+    axis next to the (already-sharded) parameters.
+    """
+
+    def __init__(self, trainer: "DistributedTrainer", sharded: bool = False):
         self.t = trainer
-        self._dense: np.ndarray | None = None  # grown to the largest shape seen
+        self.sharded = sharded
+        self._table = candidate_capacity_table(trainer.cfg.n_workers)
+        self._dense: np.ndarray | None = None
+        self._cap = 0
+
+    def reserve(self, max_candidates: int) -> None:
+        """Pre-grow the dense buffer (ladder-rounded) so a known candidate
+        bound never triggers a mid-run growth recompile."""
+        cap = candidate_capacity(max_candidates, self._table)
+        if cap > self._cap:
+            self._cap = cap
+            self._dense = np.zeros(
+                (self.t.cfg.n_workers, cap, STATE_DIM), np.float32)
 
     def fleet_q_values(self, per_worker: list[np.ndarray]) -> list[np.ndarray]:
         counts = [x.shape[0] for x in per_worker]
         if not any(counts):
             return [np.zeros((0,), np.float32) for _ in per_worker]
-        # every worker pads to the fleet max: round to a 64 grain — fine
-        # enough that a 130-candidate max doesn't cost W x 256 dense rows
-        # (the coarse power-of-two buckets), coarse enough to keep the jit
-        # shape count small as candidate counts drift between steps
-        cmax = max(64, -(-max(counts) // 64) * 64)
-        if self._dense is None or self._dense.shape[1] < cmax:
-            self._dense = np.zeros(
-                (len(per_worker), cmax, per_worker[0].shape[1]), np.float32)
-        dense = self._dense[:, :cmax]  # jit shape keys off the slice
+        self.reserve(max(counts))
+        dense = self._dense  # never sliced down: shapes only change on growth
         for w, x in enumerate(per_worker):
             dense[w, : x.shape[0]] = x
             dense[w, x.shape[0]:] = 0.0  # clear rows left by the last step
         self.t.n_q_dispatches += 1
-        q = np.asarray(self.t._fleet_q(self.t.params, jnp.asarray(dense)))
+        if self.sharded:
+            x = jax.device_put(dense, self.t._fleet_in_sharding)
+            q = np.asarray(self.t._fleet_q_sharded(self.t.params, x))
+        else:
+            q = np.asarray(self.t._fleet_q(self.t.params, jnp.asarray(dense)))
         return [q[w, :n] for w, n in enumerate(counts)]
 
     def select_action(self, q: np.ndarray, worker: int) -> int:
@@ -165,17 +206,22 @@ class DistributedTrainer:
         if W % nd != 0:
             raise ValueError(f"n_workers={W} must be divisible by mesh size {nd}")
 
-        if cfg.rollout not in ("fleet", "per_worker"):
-            raise ValueError(f"rollout must be 'fleet' or 'per_worker', got {cfg.rollout!r}")
+        if cfg.rollout not in ROLLOUT_MODES:
+            raise ValueError(f"rollout must be one of {ROLLOUT_MODES}, got {cfg.rollout!r}")
         if cfg.sync_mode not in ("episode", "step"):
             raise ValueError(f"sync_mode must be 'episode' or 'step', got {cfg.sync_mode!r}")
+
+        # size the predictor padding ladder for the fleet-wide per-step batch
+        # (one chosen successor per live slot)
+        if hasattr(service, "reserve"):
+            service.reserve(W * cfg.mols_per_worker)
 
         # fleet engine over the worker molecule partition: one Q dispatch
         # and one property batch per step across ALL workers
         self.engine = RolloutEngine(
             [self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker]
              for w in range(W)],
-            cfg.env)
+            cfg.env, pipeline_threads=cfg.pipeline_threads)
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         self.buffers = [ReplayBuffer(cfg.replay_capacity, seed=cfg.seed + 200 + w) for w in range(W)]
         self._worker_rngs = [np.random.default_rng(cfg.seed + 300 + w) for w in range(W)]
@@ -198,7 +244,9 @@ class DistributedTrainer:
         self.epsilon = cfg.dqn.epsilon_initial
         self.episode = 0
         self._views = [_WorkerView(self, w) for w in range(W)]
+        self._fleet_in_sharding = fleet_sharding(self.mesh)
         self._fleet_policy = _FleetView(self)
+        self._fleet_policy_sharded = _FleetView(self, sharded=True)
         self._build_fns()
 
     @property
@@ -292,6 +340,14 @@ class DistributedTrainer:
         # per environment step regardless of n_workers
         self._fleet_q = jax.jit(net.apply_stacked)
 
+        # the same dispatch sharded over "data": each device evaluates its
+        # resident [W/nd, C, D] slice under its resident [W/nd, ...] params;
+        # acting is embarrassingly data-parallel, so there is no collective
+        self._fleet_q_sharded = jax.jit(shard_map(
+            net.apply_stacked, mesh=mesh,
+            in_specs=(spec_w, spec_w), out_specs=spec_w,
+        ))
+
     # ------------------------------------------------------------ #
     # training
     # ------------------------------------------------------------ #
@@ -337,16 +393,19 @@ class DistributedTrainer:
     def rollout_episode(self) -> list[list[StepRecord]]:
         """One full acting episode for every worker, grouped per worker.
 
-        ``rollout="fleet"`` drives the RolloutEngine: all workers advance
-        in lockstep with one Q dispatch + one property batch per step.
+        The fleet modes drive the RolloutEngine: all workers advance in
+        lockstep with one Q dispatch + one property batch per step
+        ("fleet_sharded" dispatches through shard_map, "fleet_pipelined"
+        additionally overlaps next-step chemistry with the property batch).
         ``rollout="per_worker"`` replays the paper's sequential per-process
-        loop.  Both paths draw from the same per-worker RNG streams, so
+        loop.  All paths draw from the same per-worker RNG streams, so
         they produce identical transitions (tests/test_rollout.py).
         """
         W = self.cfg.n_workers
-        if self.cfg.rollout == "fleet":
+        if self.cfg.rollout in _FLEET_MODES:
             flat = self.engine.run_episode(
-                self._fleet_policy, self.service, self.reward_cfg, self.buffers)
+                self._active_fleet_view, self.service, self.reward_cfg,
+                self.buffers, pipelined=self.cfg.rollout == "fleet_pipelined")
             records: list[list[StepRecord]] = [[] for _ in range(W)]
             for r in flat:
                 records[r.worker].append(r)
@@ -359,6 +418,37 @@ class DistributedTrainer:
                 r.worker = w
             records.append(recs)
         return records
+
+    @property
+    def _active_fleet_view(self) -> _FleetView:
+        """The fleet policy the configured rollout mode dispatches through
+        (the sharded view for both sharded and pipelined modes)."""
+        return self._fleet_policy if self.cfg.rollout == "fleet" \
+            else self._fleet_policy_sharded
+
+    @property
+    def candidate_capacity(self) -> int:
+        """Current dense candidate-axis capacity of the active fleet view
+        (0 until the first dispatch or ``reserve_candidates``)."""
+        return 0 if self.cfg.rollout == "per_worker" \
+            else self._active_fleet_view._cap
+
+    def reserve_candidates(self, max_candidates: int) -> None:
+        """Pre-grow the fleet views' dense candidate capacity (ladder-
+        rounded) and compile the resulting dispatch shape eagerly, so a
+        known per-worker candidate bound never recompiles mid-run.  Counts
+        as warmup: bumps ``n_q_dispatches`` once if it grows.  Only touches
+        the view the configured rollout mode actually uses (no-op for the
+        per_worker path, which buckets per worker instead)."""
+        if self.cfg.rollout == "per_worker":
+            return
+        view = self._active_fleet_view
+        before = view._cap
+        view.reserve(max_candidates)
+        if view._cap != before:
+            dummy = [np.zeros((1, STATE_DIM), np.float32)
+                     for _ in range(self.cfg.n_workers)]
+            view.fleet_q_values(dummy)
 
     def _select_action(self, q: np.ndarray, w: int) -> int:
         """Decaying eps-greedy from worker ``w``'s private RNG stream."""

@@ -1,0 +1,66 @@
+"""Recompile accounting for the acting hot path.
+
+The fleet rollout's perf claims rest on *shape discipline*: after warmup,
+no environment step may trigger an XLA compile.  Two observers:
+
+``RecompileCounter``  process-global compile counter built on
+                      ``jax.monitoring``.  JAX emits
+                      '/jax/compilation_cache/compile_requests_use_cache'
+                      once per backend compile request (including nested
+                      sub-jits) and nothing on tracing-cache hits, so a
+                      window with delta == 0 provably ran entirely on
+                      already-compiled shapes.  The count is monotone and
+                      includes every jit in the process (predictors too),
+                      which is exactly what the CI smoke gate wants.
+
+``jit_cache_size``    per-function tracing-cache size (``fn._cache_size()``)
+                      for pinpointing WHICH function grew when the global
+                      counter fires.
+"""
+
+from __future__ import annotations
+
+import jax.monitoring
+
+_COMPILE_EVENT_PREFIXES = (
+    "/jax/compilation_cache/compile_requests",
+)
+
+
+class RecompileCounter:
+    """Singleton listener over jax.monitoring compile events.
+
+    Usage::
+
+        counter = RecompileCounter.install()
+        ...warmup...
+        mark = counter.count
+        ...measured work...
+        recompiles = counter.count - mark   # 0 == no new XLA compiles
+    """
+
+    _instance: "RecompileCounter | None" = None
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    @classmethod
+    def install(cls) -> "RecompileCounter":
+        if cls._instance is None:
+            inst = cls()
+            # listeners cannot be unregistered on jax 0.4.x, hence singleton
+            jax.monitoring.register_event_listener(inst._on_event)
+            cls._instance = inst
+        return cls._instance
+
+    def _on_event(self, event: str, **kwargs) -> None:
+        if event.startswith(_COMPILE_EVENT_PREFIXES):
+            self.count += 1
+
+    def delta_since(self, mark: int) -> int:
+        return self.count - mark
+
+
+def jit_cache_size(fn) -> int:
+    """Tracing-cache entry count of a ``jax.jit``-wrapped function."""
+    return fn._cache_size()

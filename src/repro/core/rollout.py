@@ -19,10 +19,37 @@ W workers it performs
 Acting cost is therefore O(1) jit dispatches per step instead of O(W).
 ``BatchedEnv``/``MoleculeEnv`` (core/env.py) are thin single-worker
 adapters over this engine, so the MolDQN-style APIs keep working.
+
+Two step implementations share every helper:
+
+``step()``            the CORRECTNESS REFERENCE.  Strictly sequential:
+                      enumerate -> Q dispatch -> select -> property batch
+                      -> transitions -> enumerate next.  Every other acting
+                      path (``step_pipelined``, the sharded trainer views)
+                      is pinned transition-identical to this one by
+                      tests/test_rollout.py — change it first, then make
+                      the fast paths match.
+``step_pipelined()``  the same transition stream, but step t+1's candidate
+                      enumeration + fingerprinting runs on host threads
+                      WHILE step t's property batch runs on device (the two
+                      only depend on step t's selected actions, not on each
+                      other).  Bit-identical because per-slot enumeration is
+                      pure and the chunked fingerprint batch is
+                      composition-independent (pinned by
+                      test_chunked_fingerprints_bit_identical).
+
+Ragged fleets are supported: workers may own different slot counts, slots
+may finish episodes at different steps, and a slot whose molecule has NO
+valid candidate actions dies cleanly — its in-flight transition is
+completed with an empty successor set (the double-DQN max treats that as a
+zero-value terminal) and flushed, and the slot stops acting.  None of this
+changes jit shapes: dead slots simply drop out of the dense batch rows.
 """
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Protocol, Sequence, runtime_checkable
 
@@ -125,16 +152,23 @@ class RolloutEngine:
 
     The engine itself is deterministic: all action stochasticity comes from
     the policy's per-worker RNG streams (``FleetPolicy.select_action``).
+    ``pipeline_threads`` sizes the host thread pool used only by
+    ``step_pipelined``.
     """
 
     def __init__(self, worker_molecules: Sequence[Sequence[Molecule]],
-                 cfg: EnvConfig | None = None):
+                 cfg: EnvConfig | None = None, pipeline_threads: int | None = None):
         self.cfg = cfg if cfg is not None else EnvConfig()
         self.worker_initials = [list(ms) for ms in worker_molecules]
         self.n_workers = len(self.worker_initials)
         self.workers: list[list[Slot]] = []
         self.n_env_steps = 0
         self._enumerated = False
+        # leave a core for the main thread (property featurize + the XLA
+        # dispatch): oversubscribing a small host makes the overlap a loss
+        self._pipeline_threads = pipeline_threads or \
+            max(1, min(4, (os.cpu_count() or 2) - 1))
+        self._pool: ThreadPoolExecutor | None = None  # built on first pipelined step
         self.reset()
 
     # ------------------------------------------------------------ #
@@ -157,65 +191,99 @@ class RolloutEngine:
     def _live(self, w: int) -> list[Slot]:
         return [s for s in self.workers[w] if s.steps_left > 0]
 
+    def _get_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._pipeline_threads,
+                thread_name_prefix="rollout-enum")
+        return self._pool
+
     # ------------------------------------------------------------ #
-    def _enumerate_all(self) -> None:
-        """One candidate-enumeration + ONE fingerprint batch over every live
-        slot of every worker; completes pending transitions with the fresh
-        candidate sets."""
-        todo = [s for slots in self.workers for s in slots if s.steps_left > 0]
-        all_cands: list[Molecule] = []
-        spans: list[tuple[Slot, int, int]] = []
-        for s in todo:
-            s.candidates = enumerate_actions(
-                s.current,
+    # candidate enumeration + fingerprinting
+    # ------------------------------------------------------------ #
+    def _compute_enum(self, mols: Sequence[Molecule]
+                      ) -> list[tuple[list[Action], np.ndarray]]:
+        """Pure per-molecule work: candidate actions + their fingerprints.
+        Thread-safe (reads molecules, builds fresh ones); per-slot results
+        do not depend on how the molecule list is sharded across calls."""
+        cands = [
+            enumerate_actions(
+                m,
                 allow_removal=self.cfg.allow_removal,
                 protect_oh=self.cfg.protect_oh,
                 allowed_ring_sizes=self.cfg.allowed_ring_sizes,
                 max_atoms=self.cfg.max_atoms,
             )
-            spans.append((s, len(all_cands), len(all_cands) + len(s.candidates)))
-            all_cands.extend(a.result for a in s.candidates)
-        if not all_cands:
-            return
-        fps = batch_morgan_fingerprints(all_cands)
-        for s, lo, hi in spans:
-            s.cand_fps = fps[lo:hi]
+            for m in mols
+        ]
+        flat = [a.result for acts in cands for a in acts]
+        fps = batch_morgan_fingerprints(flat) if flat else \
+            np.zeros((0, FP_BITS), np.float32)
+        out, off = [], 0
+        for acts in cands:
+            out.append((acts, fps[off:off + len(acts)]))
+            off += len(acts)
+        return out
+
+    def _apply_enum(self, slots: Sequence[Slot],
+                    results: Sequence[tuple[list[Action], np.ndarray]]) -> None:
+        """Install fresh candidate sets; complete pending transitions; kill
+        slots with no legal action (their pending gets an empty successor
+        set, which the double-DQN max values at zero)."""
+        for s, (acts, fps) in zip(slots, results, strict=True):
+            s.candidates = acts
+            s.cand_fps = fps
             if s.pending is not None:
                 # successor candidates are exactly this step's candidates
-                s.pending.next_fps = np.stack([pack_fp(f) for f in s.cand_fps])
+                s.pending.next_fps = (
+                    np.stack([pack_fp(f) for f in fps]) if len(acts)
+                    else np.zeros((0, FP_BITS // 8), dtype=np.uint8))
                 s.pending.next_steps_left_frac = (s.steps_left - 1) / self.cfg.max_steps
+            if not acts:
+                s.steps_left = 0  # nothing to act on: the episode ends here
+
+    def _enumerate_all(self) -> None:
+        """One candidate-enumeration + ONE fingerprint batch over every live
+        slot of every worker (the reference, single-threaded pass)."""
+        todo = [s for slots in self.workers for s in slots if s.steps_left > 0]
+        if todo:
+            self._apply_enum(todo, self._compute_enum([s.current for s in todo]))
 
     # ------------------------------------------------------------ #
-    def step(
-        self,
-        policy,
-        service,
-        reward_cfg: RewardConfig,
-        buffers: Sequence[ReplayBuffer | None] | None = None,
-    ) -> list[StepRecord]:
-        """One lockstep step for every live slot of every worker."""
-        policy = as_fleet_policy(policy)
-        if not self._enumerated:
-            self._enumerate_all()
-            self._enumerated = True
-        live_by_worker = [self._live(w) for w in range(self.n_workers)]
-        if not any(live_by_worker):
-            return []
-        self.n_env_steps += 1
+    # step helpers shared by the reference and pipelined paths
+    # ------------------------------------------------------------ #
+    def _flush_ready(self, live_by_worker: Sequence[Sequence[Slot]],
+                     buffers: Sequence[ReplayBuffer | None] | None) -> None:
+        """Move completed pending transitions into the per-worker buffers."""
+        if buffers is None:
+            return
+        for w, live in enumerate(live_by_worker):
+            buf = buffers[w]
+            if buf is None:
+                continue
+            ready = [s for s in live
+                     if s.pending is not None and s.pending.next_fps is not None]
+            buf.add_many(s.pending for s in ready)
+            for s in ready:
+                s.pending = None
 
-        # flush completed pending transitions into the per-worker buffers
-        if buffers is not None:
-            for w, live in enumerate(live_by_worker):
-                buf = buffers[w]
-                if buf is None:
-                    continue
-                ready = [s for s in live
-                         if s.pending is not None and s.pending.next_fps is not None]
-                buf.add_many(s.pending for s in ready)
-                for s in ready:
+    def _flush_dead(self, buffers: Sequence[ReplayBuffer | None] | None) -> None:
+        """Flush completed pendings of slots that died mid-episode (no legal
+        candidates) — no later step will ever visit them again."""
+        if buffers is None:
+            return
+        for w, slots in enumerate(self.workers):
+            buf = buffers[w]
+            for s in slots:
+                if (s.steps_left <= 0 and s.pending is not None
+                        and s.pending.next_fps is not None):
+                    if buf is not None:
+                        buf.add(s.pending)
                     s.pending = None
 
-        # ---- ONE Q dispatch over all candidates of all workers -------- #
+    def _build_states(self, live_by_worker: Sequence[Sequence[Slot]]
+                      ) -> list[np.ndarray]:
+        """Per-worker candidate state matrices (fingerprint ++ steps-left)."""
         per_worker_states: list[np.ndarray] = []
         for live in live_by_worker:
             if not live:
@@ -227,21 +295,29 @@ class RolloutEngine:
                 col = np.full((s.cand_fps.shape[0], 1), steps_after, dtype=np.float32)
                 stacked.append(np.concatenate([s.cand_fps, col], axis=1))
             per_worker_states.append(np.concatenate(stacked, axis=0))
-        q_by_worker = policy.fleet_q_values(per_worker_states)
+        return per_worker_states
 
-        # ---- per-worker eps-greedy selection --------------------------- #
+    def _select(self, live_by_worker: Sequence[Sequence[Slot]],
+                q_by_worker: Sequence[np.ndarray], policy: FleetPolicy
+                ) -> list[tuple[Slot, Action, np.ndarray]]:
+        """Per-worker eps-greedy selection from each worker's RNG stream."""
         chosen: list[tuple[Slot, Action, np.ndarray]] = []
         for w, live in enumerate(live_by_worker):
             q_all, off = q_by_worker[w], 0
             for s in live:
                 ln = s.cand_fps.shape[0]
+                if ln == 0:  # _apply_enum kills candidate-less slots
+                    raise RuntimeError(
+                        f"invariant violation: live slot (worker {w}, index "
+                        f"{s.index}) reached selection with zero candidates")
                 a_idx = policy.select_action(q_all[off:off + ln], w)
                 off += ln
                 chosen.append((s, s.candidates[a_idx], s.cand_fps[a_idx]))
+        return chosen
 
-        # ---- ONE property batch over the chosen successors fleet-wide -- #
-        props = service.predict([a.result for _, a, _ in chosen])
-
+    def _apply_step(self, chosen, props, reward_cfg: RewardConfig,
+                    buffers) -> list[StepRecord]:
+        """Commit the chosen actions: rewards, transitions, slot advance."""
         records: list[StepRecord] = []
         for (s, act, fp), pr in zip(chosen, props, strict=True):
             s.current = act.result
@@ -277,8 +353,91 @@ class RolloutEngine:
                 done=done, conformer_valid=pr.conformer_valid,
                 bde=pr.bde, ip=pr.ip, worker=s.worker,
             ))
+        return records
 
+    def _begin_step(self, buffers) -> list[list[Slot]] | None:
+        """Common step prologue: first-use enumeration, liveness, flush."""
+        if not self._enumerated:
+            self._enumerate_all()
+            self._enumerated = True
+        live_by_worker = [self._live(w) for w in range(self.n_workers)]
+        if not any(live_by_worker):
+            return None
+        self.n_env_steps += 1
+        self._flush_ready(live_by_worker, buffers)
+        return live_by_worker
+
+    # ------------------------------------------------------------ #
+    def step(
+        self,
+        policy,
+        service,
+        reward_cfg: RewardConfig,
+        buffers: Sequence[ReplayBuffer | None] | None = None,
+    ) -> list[StepRecord]:
+        """One lockstep step for every live slot of every worker.
+
+        This is the CORRECTNESS REFERENCE implementation — strictly
+        sequential, no overlap.  ``step_pipelined`` must stay
+        transition-identical to it (tests/test_rollout.py)."""
+        policy = as_fleet_policy(policy)
+        live_by_worker = self._begin_step(buffers)
+        if live_by_worker is None:
+            return []
+
+        # ---- ONE Q dispatch over all candidates of all workers -------- #
+        q_by_worker = policy.fleet_q_values(self._build_states(live_by_worker))
+
+        # ---- per-worker eps-greedy selection --------------------------- #
+        chosen = self._select(live_by_worker, q_by_worker, policy)
+
+        # ---- ONE property batch over the chosen successors fleet-wide -- #
+        props = service.predict([a.result for _, a, _ in chosen])
+
+        records = self._apply_step(chosen, props, reward_cfg, buffers)
         self._enumerate_all()
+        self._flush_dead(buffers)
+        return records
+
+    def step_pipelined(
+        self,
+        policy,
+        service,
+        reward_cfg: RewardConfig,
+        buffers: Sequence[ReplayBuffer | None] | None = None,
+    ) -> list[StepRecord]:
+        """``step()`` with the host/device overlap: after action selection,
+        step t+1's candidate enumeration + fingerprinting is sharded across
+        host threads while the fleet property batch runs.  Both depend only
+        on the selected actions, not on each other, so the transition
+        stream is identical to the reference."""
+        policy = as_fleet_policy(policy)
+        live_by_worker = self._begin_step(buffers)
+        if live_by_worker is None:
+            return []
+
+        q_by_worker = policy.fleet_q_values(self._build_states(live_by_worker))
+        chosen = self._select(live_by_worker, q_by_worker, policy)
+
+        # slots still alive after this step, in the reference enumeration
+        # order (worker-major, slot order); their successors' candidates are
+        # what the end-of-step enumeration would compute
+        nxt = [(s, a.result) for s, a, _ in chosen if s.steps_left - 1 > 0]
+        futures = []
+        if nxt:
+            pool = self._get_pool()
+            mols = [m for _, m in nxt]
+            shard = -(-len(mols) // self._pipeline_threads)
+            futures = [pool.submit(self._compute_enum, mols[i:i + shard])
+                       for i in range(0, len(mols), shard)]
+
+        props = service.predict([a.result for _, a, _ in chosen])
+        records = self._apply_step(chosen, props, reward_cfg, buffers)
+
+        if futures:
+            self._apply_enum([s for s, _ in nxt],
+                             [r for f in futures for r in f.result()])
+        self._flush_dead(buffers)
         return records
 
     # ------------------------------------------------------------ #
@@ -288,12 +447,14 @@ class RolloutEngine:
         service,
         reward_cfg: RewardConfig,
         buffers: Sequence[ReplayBuffer | None] | None = None,
+        pipelined: bool = False,
     ) -> list[StepRecord]:
         """Reset + roll a full fleet episode; returns ALL step records."""
         self.reset()
+        step = self.step_pipelined if pipelined else self.step
         all_recs: list[StepRecord] = []
         while not self.done:
-            all_recs.extend(self.step(policy, service, reward_cfg, buffers))
+            all_recs.extend(step(policy, service, reward_cfg, buffers))
         return all_recs
 
     # ------------------------------------------------------------ #

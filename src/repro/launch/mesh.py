@@ -8,7 +8,7 @@ device query, and smoke tests must keep seeing 1 CPU device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -22,6 +22,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_host_mesh() -> Mesh:
     """All locally-visible devices on a single "data" axis (RL trainer)."""
     return jax.make_mesh((jax.device_count(),), ("data",))
+
+
+def fleet_sharding(mesh: Mesh) -> NamedSharding:
+    """Placement for fleet-stacked values (the ``[W, ...]`` parameter tree
+    and the ``[W, C, D]`` acting batch): leading worker axis split over
+    "data", everything else replicated."""
+    return NamedSharding(mesh, P("data"))
 
 
 def batch_axes(mesh: Mesh) -> tuple[str, ...]:

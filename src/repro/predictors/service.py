@@ -31,7 +31,36 @@ from repro.predictors.gnn import AlfabetS
 from repro.predictors.ip_net import AIMNetS
 
 MAX_ATOMS = 40
-_BUCKETS = (1, 8, 32, 64, 128, 512)  # 64: common fleet-wide batch (W workers x 1)
+DEFAULT_MAX_BATCH = 64  # one chosen successor per worker at the default fleet size
+
+
+def capacity_table(max_batch: int, *, grain: int = 8, ratio: float = 1.5) -> tuple[int, ...]:
+    """Geometric bucket ladder for predictor batch padding, ``1..max_batch``.
+
+    Deliberately separate from ``core.agent.candidate_capacity_table``:
+    this ladder terminates EXACTLY at the fleet batch size (the snap
+    behaviour below), the candidate ladder is open-ended with a
+    fleet-dependent ratio — and predictors must not import repro.core.
+
+    Derived from the fleet size: ``max_batch`` should be the largest batch
+    the caller expects (W workers x mols each — see ``PropertyService.reserve``).
+    Interior rungs grow by ``ratio`` (padding bounded by ``ratio``x there)
+    and the ladder ends EXACTLY at ``max_batch``: every batch within ~2x of
+    the fleet-wide size (in-batch dedupe makes the count drift a little below
+    W) snaps to the one reserved shape instead of walking its own rungs —
+    at W=512 the per-step batch always reuses a single compiled predictor
+    shape, where the old static table padded intermediate sizes up to ~8x.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    caps = [1]
+    c = grain
+    while c * ratio < max_batch:
+        caps.append(c)
+        c = max(c + grain, grain * round(c * ratio / grain))
+    if max_batch > 1:
+        caps.append(max_batch)
+    return tuple(caps)
 
 
 def featurize(mol: Molecule, max_atoms: int = MAX_ATOMS) -> dict[str, np.ndarray]:
@@ -68,6 +97,7 @@ class PropertyService:
     ip_params: dict
     max_atoms: int = MAX_ATOMS
     cache: LRUCache | None = field(default_factory=lambda: LRUCache(200_000))
+    max_batch_hint: int = DEFAULT_MAX_BATCH  # fleet-wide batch bound (see reserve)
 
     # statistics (§3.6)
     n_predict_calls: int = 0      # predict() entries (one per env step fleet-wide)
@@ -77,6 +107,15 @@ class PropertyService:
     def __post_init__(self):
         self._bde_apply = jax.jit(self.bde_model.apply)
         self._ip_apply = jax.jit(self.ip_model.apply)
+        self._buckets = capacity_table(self.max_batch_hint)
+
+    def reserve(self, max_batch: int) -> None:
+        """Size the padding ladder for a fleet that predicts up to
+        ``max_batch`` molecules per step (the trainer calls this with
+        W x mols_per_worker).  Only ever grows the hint."""
+        if max_batch > self.max_batch_hint:
+            self.max_batch_hint = max_batch
+            self._buckets = capacity_table(max_batch)
 
     # ------------------------------------------------------------ #
     def predict(self, mols: Sequence[Molecule]) -> list[Properties]:
@@ -122,7 +161,7 @@ class PropertyService:
     def _run_models(self, batch: dict[str, np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
         """Pad the batch dim to a bucket to bound jit recompiles."""
         b = batch["atom_feat"].shape[0]
-        padded = _next_bucket(b)
+        padded = self._pad_to(b)
         if padded != b:
             batch = {k: np.concatenate(
                 [v, np.zeros((padded - b,) + v.shape[1:], v.dtype)]) for k, v in batch.items()}
@@ -134,9 +173,11 @@ class PropertyService:
         ip = self._ip_apply(self.ip_params, batch)
         return np.asarray(mol_bde)[:b], np.asarray(ip)[:b]
 
-
-def _next_bucket(b: int) -> int:
-    for cap in _BUCKETS:
-        if b <= cap:
-            return cap
-    return ((b + 511) // 512) * 512
+    def _pad_to(self, b: int) -> int:
+        for cap in self._buckets:
+            if b <= cap:
+                return cap
+        # over-hint batch: grow the ladder (grain-rounded) so near-identical
+        # follow-up batches reuse the same compiled shape
+        self.reserve(8 * -(-b // 8))
+        return self._buckets[-1]

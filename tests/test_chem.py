@@ -44,6 +44,17 @@ def test_valences_and_oh(phenol):
     assert len(phenol.ring_info()[0]) == 6
 
 
+def test_ring_info_never_writes_bonds():
+    """The pipelined rollout enumerates molecules on host threads while the
+    property path computes ring_info on the same objects, so ring_info must
+    not touch self.bonds even transiently (regression: it used to zero and
+    restore each cycle bond, a data race under the overlap)."""
+    mol = from_smiles(PHENOL)
+    mol.bonds.flags.writeable = False      # any write now raises
+    rings = mol.ring_info()
+    assert len(rings) == 1 and len(rings[0]) == 6
+
+
 def test_canonical_key_permutation_invariant(bht):
     rng = np.random.default_rng(0)
     for _ in range(5):

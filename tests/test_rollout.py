@@ -1,18 +1,26 @@
-"""Fleet rollout engine: one Q dispatch + one property batch per step,
-seeded equivalence with the seed per-worker sequential path, and the
-PropertyService in-batch dedupe."""
+"""Fleet rollout engine: the acting-path equivalence matrix (every rollout
+mode transition-identical to the sequential reference), ragged-fleet and
+zero-candidate robustness, shape discipline (no recompiles once capacity
+settles), and PropertyService dedupe / bucket selection."""
 
 import jax
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # declared in pyproject [test]; degrade to a skip
+    HAVE_HYPOTHESIS = False
 
 from repro.chem.smiles import from_smiles
 from repro.core import (
     DQNAgent, DQNConfig, EnvConfig, ReplayBuffer, RewardConfig, RolloutEngine,
     TrainerConfig,
 )
-from repro.core.agent import QNetwork
-from repro.core.distributed import DistributedTrainer
+from repro.core.agent import QNetwork, candidate_capacity, candidate_capacity_table
+from repro.core.distributed import ROLLOUT_MODES, DistributedTrainer
+from repro.core.jit_stats import jit_cache_size
 
 MOLS = [from_smiles(s) for s in
         ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
@@ -51,37 +59,75 @@ def _transitions(buf: ReplayBuffer):
 
 
 # ------------------------------------------------------------------ #
-# seeded equivalence: fleet engine == seed per-worker path
+# the equivalence matrix: every rollout mode == sequential reference
 # ------------------------------------------------------------------ #
+def _matrix_trainer(rollout: str, sync_mode: str, W: int, seed: int
+                    ) -> DistributedTrainer:
+    cfg = TrainerConfig(
+        n_workers=W, mols_per_worker=1, episodes=2, sync_mode=sync_mode,
+        rollout=rollout, updates_per_episode=1, train_batch_size=3,
+        max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
+        env=EnvConfig(max_steps=3), seed=seed)
+    mols = (MOLS * ((W + len(MOLS) - 1) // len(MOLS)))[:W]
+    return DistributedTrainer(cfg, mols, _OracleService(), RewardConfig(),
+                              network=QNetwork(hidden=(32,)))
+
+
+def _assert_matrix_equivalent(seed: int, W: int, sync_mode: str,
+                              episodes: int) -> None:
+    """All rollout modes must produce the identical transition stream (and,
+    when training updates run, identical synced parameters)."""
+    streams, stats, params = {}, {}, {}
+    for mode in ROLLOUT_MODES:
+        tr = _matrix_trainer(mode, sync_mode, W, seed)
+        stats[mode] = [tr.train_episode() for _ in range(episodes)]
+        streams[mode] = [_transitions(b) for b in tr.buffers]
+        params[mode] = jax.tree_util.tree_leaves(tr.params)
+    ref = "per_worker"
+    for mode in ROLLOUT_MODES:
+        if mode == ref:
+            continue
+        assert streams[mode] == streams[ref], \
+            f"{mode} transition stream diverged from {ref} (W={W}, {sync_mode})"
+        for sm, sr in zip(stats[mode], stats[ref]):
+            assert sm["mean_final_reward"] == pytest.approx(
+                sr["mean_final_reward"], abs=1e-6, nan_ok=True)
+            assert sm["loss"] == pytest.approx(sr["loss"], abs=1e-5, nan_ok=True)
+        for xm, xr in zip(params[mode], params[ref]):
+            np.testing.assert_allclose(np.asarray(xm), np.asarray(xr), atol=1e-6)
+
+
 @pytest.mark.parametrize("sync_mode", ["episode", "step"])
-def test_fleet_rollout_matches_per_worker(sync_mode):
-    fleet = _trainer(sync_mode, "fleet")
-    seq = _trainer(sync_mode, "per_worker")
-    for _ in range(2):
-        sf = fleet.train_episode()
-        ss = seq.train_episode()
-        assert sf["mean_final_reward"] == pytest.approx(
-            ss["mean_final_reward"], abs=1e-6)
-        assert sf["loss"] == pytest.approx(ss["loss"], abs=1e-5, nan_ok=True)
-    # per-worker replay buffers hold identical transition streams
-    for bf, bs in zip(fleet.buffers, seq.buffers):
-        assert _transitions(bf) == _transitions(bs)
-    # and the synced parameters agree
-    for xf, xs in zip(jax.tree_util.tree_leaves(fleet.params),
-                      jax.tree_util.tree_leaves(seq.params)):
-        np.testing.assert_allclose(np.asarray(xf), np.asarray(xs), atol=1e-6)
+@pytest.mark.parametrize("W", [1, 4, 8])
+def test_rollout_mode_matrix(W, sync_mode):
+    _assert_matrix_equivalent(seed=0, W=W, sync_mode=sync_mode, episodes=2)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**20),
+           W=st.sampled_from([1, 4, 8]),
+           sync_mode=st.sampled_from(["episode", "step"]))
+    def test_rollout_mode_matrix_property(seed, W, sync_mode):
+        _assert_matrix_equivalent(seed=seed, W=W, sync_mode=sync_mode, episodes=1)
+else:
+    def test_rollout_mode_matrix_property():
+        pytest.importorskip("hypothesis")
 
 
 # ------------------------------------------------------------------ #
-# O(1) dispatch scaling
+# O(1) dispatch scaling (reference and pipelined step loops)
 # ------------------------------------------------------------------ #
-def test_fleet_one_q_dispatch_and_one_property_batch_per_step():
-    tr = _trainer("episode", "fleet")
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_fleet_one_q_dispatch_and_one_property_batch_per_step(pipelined):
+    tr = _trainer("episode", "fleet_pipelined" if pipelined else "fleet")
     tr.engine.reset()
+    policy = tr._fleet_policy_sharded if pipelined else tr._fleet_policy
+    step = tr.engine.step_pipelined if pipelined else tr.engine.step
     steps = 0
     while not tr.engine.done:
         q0, p0 = tr.n_q_dispatches, tr.service.n_calls
-        tr.engine.step(tr._fleet_policy, tr.service, tr.reward_cfg, tr.buffers)
+        step(policy, tr.service, tr.reward_cfg, tr.buffers)
         assert tr.n_q_dispatches == q0 + 1          # regardless of n_workers
         assert tr.service.n_calls == p0 + 1
         steps += 1
@@ -126,6 +172,127 @@ def test_slot_index_is_stored_not_scanned():
 
 
 # ------------------------------------------------------------------ #
+# ragged fleets: uneven worker sizes, early finishers, dead workers
+# ------------------------------------------------------------------ #
+def test_ragged_worker_sizes_and_early_finishers():
+    """Workers may own different slot counts and slots may run out of steps
+    at different times; the engine keeps stepping the survivors."""
+    engine = RolloutEngine([[MOLS[0], MOLS[1]], [MOLS[2]]], EnvConfig(max_steps=3))
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    svc, bufs = _OracleService(), [ReplayBuffer(100, seed=2), ReplayBuffer(100, seed=3)]
+    engine.step(agent, svc, RewardConfig(), bufs)   # also triggers first enumerate
+    engine.workers[1][0].steps_left = 1             # worker 1 finishes next step
+    recs2 = engine.step(agent, svc, RewardConfig(), bufs)
+    assert any(r.done for r in recs2 if r.worker == 1)
+    recs3 = engine.step(agent, svc, RewardConfig(), bufs)
+    assert all(r.worker == 0 for r in recs3)        # only worker 0 still live
+    while not engine.done:
+        engine.step(agent, svc, RewardConfig(), bufs)
+    assert len(bufs[0]) == 2 * 3 and len(bufs[1]) == 2  # every transition landed
+
+
+def test_ragged_fleet_keeps_dense_shape_on_fleet_path():
+    """A worker dying mid-episode must not change the dense [W, C, D] jit
+    shape: dead rows zero out, capacity is sticky."""
+    tr = _trainer("episode", "fleet")
+    tr.reserve_candidates(200)                      # settle capacity up front
+    engine = tr.engine
+    engine.reset()
+    engine.step(tr._fleet_policy, tr.service, tr.reward_cfg, tr.buffers)
+    n_shapes = jit_cache_size(tr._fleet_q)
+    for s in engine.workers[0]:                     # worker 0 finishes early
+        s.steps_left = 0
+    while not engine.done:
+        engine.step(tr._fleet_policy, tr.service, tr.reward_cfg, tr.buffers)
+    assert jit_cache_size(tr._fleet_q) == n_shapes
+
+
+def test_zero_candidate_slots_die_cleanly(monkeypatch):
+    """A slot whose molecule has no legal action stops acting; its in-flight
+    transition is completed with an EMPTY successor set and still reaches
+    the replay buffer (the double-DQN max values it at zero)."""
+    import repro.core.rollout as rollout_mod
+    engine = RolloutEngine([[MOLS[0], MOLS[1]]], EnvConfig(max_steps=3))
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    svc, bufs = _OracleService(), [ReplayBuffer(100, seed=2)]
+    engine.step(agent, svc, RewardConfig(), bufs)
+    # every molecule now has zero candidates: both slots die at the end of
+    # the next step even though steps_left would allow a third step
+    monkeypatch.setattr(rollout_mod, "enumerate_actions", lambda m, **kw: [])
+    engine.step(agent, svc, RewardConfig(), bufs)
+    assert engine.done
+    assert len(bufs[0]) == 4                        # 2 slots x 2 steps, none lost
+    tail = bufs[0]._items[-2:]
+    assert all(t.next_fps.shape[0] == 0 and not t.done for t in tail)
+    batch = bufs[0].sample(8, max_candidates=16)    # trainable as-is
+    assert np.isfinite(batch["rewards"]).all()
+
+
+def test_all_slots_dead_at_reset(monkeypatch):
+    """No legal action anywhere on step one: the engine finishes without a
+    single Q dispatch or property batch instead of crashing."""
+    import repro.core.rollout as rollout_mod
+    monkeypatch.setattr(rollout_mod, "enumerate_actions", lambda m, **kw: [])
+    engine = RolloutEngine([[MOLS[0]], [MOLS[1]]], EnvConfig(max_steps=3))
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    svc = _OracleService()
+    assert engine.step(agent, svc, RewardConfig(), None) == []
+    assert engine.done and svc.n_calls == 0 and agent.n_q_dispatches == 0
+
+
+def test_pipelined_matches_reference_under_zero_candidate_deaths(monkeypatch):
+    """The overlap path must keep the identical transition stream even when
+    slots die mid-episode from candidate exhaustion."""
+    import repro.core.rollout as rollout_mod
+    real = rollout_mod.enumerate_actions
+
+    def gated(m, **kw):   # molecules that grew past 8 heavy atoms are stuck
+        return [] if len(m.elements) > 8 else real(m, **kw)
+
+    monkeypatch.setattr(rollout_mod, "enumerate_actions", gated)
+    streams = []
+    for pipelined in (False, True):
+        engine = RolloutEngine([[MOLS[0], MOLS[1]], [MOLS[2], MOLS[3]]],
+                               EnvConfig(max_steps=4))
+        agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=7,
+                         network=QNetwork(hidden=(32,)))
+        bufs = [ReplayBuffer(100, seed=11), ReplayBuffer(100, seed=12)]
+        engine.run_episode(agent, _OracleService(), RewardConfig(), bufs,
+                           pipelined=pipelined)
+        streams.append([_transitions(b) for b in bufs])
+    assert streams[0] == streams[1]
+
+
+# ------------------------------------------------------------------ #
+# capacity ladders (pure)
+# ------------------------------------------------------------------ #
+def test_candidate_capacity_table_scales_with_fleet():
+    small, big = candidate_capacity_table(4), candidate_capacity_table(512)
+    assert len(big) > len(small)                    # finer rungs at large W
+    for table in (small, big):
+        assert all(b > a for a, b in zip(table, table[1:]))
+        assert candidate_capacity(1, table) == table[0]
+        assert candidate_capacity(table[-1] + 1, table) >= table[-1] + 1
+    # big-fleet rung ratio is bounded: never pads 2x past the previous rung
+    ratios = [b / a for a, b in zip(big, big[1:])]
+    assert max(ratios[2:]) <= 1.5
+
+
+def test_service_capacity_table_snaps_to_fleet_batch():
+    from repro.predictors.service import capacity_table
+    table = capacity_table(512)
+    assert table[-1] == 512
+    # dedupe drift just below W reuses the exact reserved shape
+    assert next(c for c in table if c >= 500) == 512
+    assert next(c for c in table if c >= 412) == 512
+    table64 = capacity_table(64)
+    assert table64[-1] == 64 and table64[0] == 1
+
+
+# ------------------------------------------------------------------ #
 # fleet-sized fingerprint batches: chunked pass is bit-identical
 # ------------------------------------------------------------------ #
 def test_chunked_fingerprints_bit_identical():
@@ -143,7 +310,7 @@ def test_chunked_fingerprints_bit_identical():
 
 
 # ------------------------------------------------------------------ #
-# PropertyService: duplicate molecules in one batch featurize once
+# PropertyService: dedupe, call accounting, collisions, bucket choice
 # ------------------------------------------------------------------ #
 @pytest.fixture(scope="module")
 def tiny_service():
@@ -172,3 +339,67 @@ def test_service_dedupes_within_batch(tiny_service):
     assert svc.n_predictor_batches == n_batches
     assert svc.cache.hits == 2
     assert props2[0].bde == props[0].bde
+
+
+def test_service_predict_call_accounting(tiny_service):
+    """n_predict_calls counts predict() ENTRIES (one per fleet step), not
+    molecules; n_predictor_batches counts jit'd model batches (cache hits
+    and empty calls run none)."""
+    svc = tiny_service
+    calls0, batches0 = svc.n_predict_calls, svc.n_predictor_batches
+    svc.predict([MOLS[0], MOLS[1], MOLS[2]])         # possibly all cached
+    svc.predict([MOLS[0]])
+    svc.predict([])
+    assert svc.n_predict_calls == calls0 + 3
+    svc.predict([MOLS[0], MOLS[1]])                  # cached from above
+    assert svc.n_predictor_batches <= batches0 + 1   # at most the first ran
+
+
+def test_service_iso_key_collision_coalesces(tiny_service):
+    """Colliding iso_keys coalesce: the later molecule is featurized ZERO
+    times and inherits the earlier one's prediction (documented
+    hash-collision semantics — iso_key is an isomorphism-invariant hash,
+    not a perfect identifier)."""
+    svc = tiny_service
+    a = from_smiles("C1=CC=CC=C1O")
+    b = from_smiles("CC1=CC(C)=CC(C)=C1O")
+    assert a.iso_key() != b.iso_key()
+    a._iso_cache = b._iso_cache = 0xC0111DE          # force a fresh colliding key
+    n_mols0 = svc.n_predictor_mols
+    pa, pb = svc.predict([a, b])
+    assert svc.n_predictor_mols == n_mols0 + 1       # b never featurized
+    assert pb.ip == pa.ip                            # b coalesced onto a's slot
+    assert pb.bde == pa.bde                          # (both have an O-H bond)
+
+
+def test_fleet_sized_batch_picks_one_bucket_no_recompile_on_second_call():
+    """A W=512-sized predict batch pads to the single reserved bucket, and a
+    second fleet-sized batch (slightly smaller after dedupe) reuses the same
+    compiled shape — zero recompiles."""
+    from repro.core.jit_stats import jit_cache_size
+    from repro.predictors.gnn import AlfabetS
+    from repro.predictors.ip_net import AIMNetS
+    from repro.predictors.service import PropertyService
+    bde_model, ip_model = AlfabetS(hidden=16, rounds=1), AIMNetS(hidden=16)
+    svc = PropertyService(
+        bde_model, bde_model.init(jax.random.PRNGKey(0)),
+        ip_model, ip_model.init(jax.random.PRNGKey(1)),
+        max_atoms=12, cache=None)
+    svc.reserve(512)                                 # what the trainer does at W=512
+
+    def fresh(n, tag):
+        out = []
+        for i in range(n):
+            m = from_smiles("C1=CC=CC=C1O")
+            m._iso_cache = tag * 10_000 + i          # force distinct iso keys
+            out.append(m)
+        return out
+
+    svc.predict(fresh(512, 1))                       # the full fleet batch
+    assert svc.n_predictor_batches == 1
+    assert jit_cache_size(svc._bde_apply) == 1
+    assert jit_cache_size(svc._ip_apply) == 1
+    svc.predict(fresh(490, 2))                       # post-dedupe drift
+    assert svc.n_predictor_batches == 2
+    assert jit_cache_size(svc._bde_apply) == 1       # same bucket, no recompile
+    assert jit_cache_size(svc._ip_apply) == 1
