@@ -15,8 +15,8 @@ import traceback
 
 from benchmarks.common import RESULTS, emit, save_results
 
-BENCHES = ("env", "fingerprint", "cache", "rollout", "models", "properties",
-           "qed_plogp", "sync_modes", "kernels", "roofline")
+BENCHES = ("env", "fingerprint", "cache", "rollout", "train", "models",
+           "properties", "qed_plogp", "sync_modes", "kernels", "roofline")
 
 
 def main() -> None:

@@ -13,7 +13,9 @@ Distributed deep-Q molecular optimisation with:
 Layout:
   reward.py       Eq. 1 + min-max normalisation bounds from the dataset
   agent.py        Q-network (fingerprint MLP), double-DQN loss, eps-greedy
-  replay.py       bit-packed replay buffer (fingerprints as packed bits)
+  replay.py       bit-packed SoA replay ring buffer (vectorized sampling,
+                  packed uint8 batches for the device-side unpack)
+  packed_batch.py jit-side unpack of packed replay batches
   rollout.py      fleet-level rollout engine: one Q dispatch + one property
                   batch per step across ALL workers
   env.py          single + batched molecule environments (thin single-worker
@@ -30,7 +32,9 @@ from repro.core.agent import QNetwork, DQNAgent, DQNConfig
 from repro.core.replay import ReplayBuffer, Transition
 from repro.core.rollout import RolloutEngine, StepRecord, AgentFleetPolicy
 from repro.core.env import MoleculeEnv, BatchedEnv, EnvConfig
-from repro.core.distributed import DistributedTrainer, TrainerConfig, ROLLOUT_MODES
+from repro.core.distributed import (
+    DistributedTrainer, TrainerConfig, LEARNER_MODES, ROLLOUT_MODES,
+)
 from repro.core.finetune import fine_tune
 from repro.core.filter import filter_molecules, FilterCriteria
 
@@ -40,6 +44,6 @@ __all__ = [
     "ReplayBuffer", "Transition",
     "RolloutEngine", "StepRecord", "AgentFleetPolicy",
     "MoleculeEnv", "BatchedEnv", "EnvConfig",
-    "DistributedTrainer", "TrainerConfig", "ROLLOUT_MODES",
+    "DistributedTrainer", "TrainerConfig", "LEARNER_MODES", "ROLLOUT_MODES",
     "fine_tune", "filter_molecules", "FilterCriteria",
 ]

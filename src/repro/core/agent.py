@@ -74,7 +74,7 @@ class DQNConfig:
     epsilon_initial: float = 1.0     # Table 2 (individual/parallel/general)
     epsilon_decay: float = 0.999     # per-episode; 0.97 for the general model
     epsilon_min: float = 0.01
-    batch_size: float = 128          # max training batch (Table 2)
+    batch_size: int = 128            # max training batch (Table 2)
     grad_clip: float = 10.0
     target_update_episodes: int = 1  # Table 3 "Update Episodes 1"
     use_pallas_qnet: bool = False    # route Q eval through the fused kernel
@@ -151,7 +151,7 @@ class DQNAgent:
     def q_values(self, states: np.ndarray) -> np.ndarray:
         """states f32[N, STATE_DIM] -> q f32[N]; one jit call, bucketed."""
         n = states.shape[0]
-        padded = _bucket(n)
+        padded = pad_rows(n)
         if padded != n:
             states = np.concatenate(
                 [states, np.zeros((padded - n, states.shape[1]), states.dtype)])
@@ -196,7 +196,11 @@ def huber(x: jnp.ndarray, delta: float = 1.0) -> jnp.ndarray:
     return jnp.where(a <= delta, 0.5 * x * x, delta * (a - 0.5 * delta))
 
 
-def _bucket(n: int, sizes=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+def pad_rows(n: int, sizes=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    """Row-count padding bucket for per-worker Q dispatches (the shared
+    helper — ``agent.q_values`` and the trainer's ``_WorkerView`` both
+    bucket through this one ladder, so they always hit the same jit
+    shapes)."""
     for s in sizes:
         if n <= s:
             return s

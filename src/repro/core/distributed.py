@@ -42,10 +42,31 @@ tests/test_rollout.py:
                                 double-buffered step: step t+1's candidate
                                 enumeration/fingerprinting overlaps step
                                 t's property batch (the 512-worker path).
+
+Learning (replay sample -> update step) is the acting refactor's twin,
+selected by ``TrainerConfig.learner`` (``LEARNER_MODES``), all three paths
+pinned loss-trajectory-identical by tests/test_learner.py:
+
+* ``learner="dense"``            the seed path: host-side dense float32
+                                 batches (``ReplayBuffer.sample``), shipped
+                                 as ``[W, B, C, FP_BITS+1]`` floats;
+* ``learner="packed"``           ``sample_packed`` ships uint8 bit planes
+                                 (32x less H2D traffic) and the unpack runs
+                                 INSIDE the jit'd update (``packed_batch.
+                                 densify_batch``, per device shard);
+* ``learner="packed_pipelined"`` packed + double-buffered sampling: a host
+                                 sampler thread prepares update k+1's batch
+                                 while update k runs on device (the same
+                                 overlap idiom as the engine's
+                                 ``step_pipelined``; batches are identical
+                                 because the buffers are not written between
+                                 updates and the single sampler thread draws
+                                 the per-buffer RNG streams in order).
 """
 
 from __future__ import annotations
 
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 
 import jax
@@ -56,9 +77,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.chem.molecule import Molecule
 from repro.core.agent import (
     DQNAgent, DQNConfig, QNetwork, candidate_capacity, candidate_capacity_table,
-    huber,
+    huber, pad_rows,
 )
 from repro.core.env import BatchedEnv, EnvConfig, StepRecord
+from repro.core.packed_batch import densify_batch, packed_nbytes
 from repro.core.replay import ReplayBuffer
 from repro.core.rollout import STATE_DIM, RolloutEngine
 from repro.core.reward import RewardConfig
@@ -84,6 +106,7 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool | None = None):
 
 ROLLOUT_MODES = ("fleet", "fleet_sharded", "fleet_pipelined", "per_worker")
 _FLEET_MODES = ("fleet", "fleet_sharded", "fleet_pipelined")
+LEARNER_MODES = ("packed", "packed_pipelined", "dense")
 
 
 @dataclass(frozen=True)
@@ -93,6 +116,7 @@ class TrainerConfig:
     episodes: int = 250               # general model (Table 1)
     sync_mode: str = "episode"        # "episode" (DA-MolDQN) | "step" (DDP)
     rollout: str = "fleet"            # see ROLLOUT_MODES (module docstring)
+    learner: str = "packed"           # see LEARNER_MODES (module docstring)
     updates_per_episode: int = 4
     train_batch_size: int = 32        # <= Table 2's 512 cap; CPU-scaled
     max_candidates: int = 64          # replay target max truncation
@@ -113,7 +137,7 @@ class _WorkerView:
 
     def q_values(self, states: np.ndarray) -> np.ndarray:
         n = states.shape[0]
-        padded = _bucket(n)
+        padded = pad_rows(n)
         if padded != n:
             states = np.concatenate(
                 [states, np.zeros((padded - n, states.shape[1]), states.dtype)])
@@ -208,6 +232,8 @@ class DistributedTrainer:
 
         if cfg.rollout not in ROLLOUT_MODES:
             raise ValueError(f"rollout must be one of {ROLLOUT_MODES}, got {cfg.rollout!r}")
+        if cfg.learner not in LEARNER_MODES:
+            raise ValueError(f"learner must be one of {LEARNER_MODES}, got {cfg.learner!r}")
         if cfg.sync_mode not in ("episode", "step"):
             raise ValueError(f"sync_mode must be 'episode' or 'step', got {cfg.sync_mode!r}")
 
@@ -223,9 +249,16 @@ class DistributedTrainer:
              for w in range(W)],
             cfg.env, pipeline_threads=cfg.pipeline_threads)
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
-        self.buffers = [ReplayBuffer(cfg.replay_capacity, seed=cfg.seed + 200 + w) for w in range(W)]
+        # storage truncates where sample() would anyway (cfg.max_candidates),
+        # so the SoA candidate axis never outgrows what training can see
+        self.buffers = [ReplayBuffer(cfg.replay_capacity, seed=cfg.seed + 200 + w,
+                                     max_candidates=cfg.max_candidates)
+                        for w in range(W)]
         self._worker_rngs = [np.random.default_rng(cfg.seed + 300 + w) for w in range(W)]
         self.n_q_dispatches = 0  # acting-side jit dispatches (both paths)
+        self.n_updates = 0       # learner update steps issued
+        self.h2d_update_bytes = 0  # host->device bytes shipped by update batches
+        self._sampler_pool: ThreadPoolExecutor | None = None  # packed_pipelined
 
         # stacked per-worker params [W, ...] sharded over "data"
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed), W)
@@ -314,20 +347,47 @@ class DistributedTrainer:
                     jax.lax.pmean(jnp.mean(x, axis=0, keepdims=True), "data"), x.shape),
                 tree)
 
+        # packed twins: identical update bodies, but the batch arrives as
+        # uint8 bit planes and each device unpacks ONLY its resident
+        # [W/nd, B, ...] shard inside the jit (no dense H2D transfer)
+        def local_update_packed_body(params, target, opt_state, packed):
+            return local_update_body(params, target, opt_state,
+                                     densify_batch(packed))
+
+        def ddp_update_packed_body(params, target, opt_state, packed):
+            return ddp_update_body(params, target, opt_state,
+                                   densify_batch(packed))
+
+        # outputs pinned to the canonical worker-sharded placement: without
+        # this the compiler may mark some update outputs replicated, and the
+        # NEXT update (params/opt re-entering as inputs) retraces on the
+        # sharding flip — one compiled train-step shape, not two
+        out_w = NamedSharding(mesh, P("data"))
         self._local_update = jax.jit(shard_map(
             local_update_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
             out_specs=(spec_w, spec_w, spec_w),
-        ))
+        ), out_shardings=out_w)
         self._ddp_update = jax.jit(shard_map(
             ddp_update_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
             out_specs=(spec_w, spec_w, spec_w),
             check_rep=False,
-        ))
+        ), out_shardings=out_w)
+        self._local_update_packed = jax.jit(shard_map(
+            local_update_packed_body, mesh=mesh,
+            in_specs=(spec_w, spec_w, spec_w, spec_w),
+            out_specs=(spec_w, spec_w, spec_w),
+        ), out_shardings=out_w)
+        self._ddp_update_packed = jax.jit(shard_map(
+            ddp_update_packed_body, mesh=mesh,
+            in_specs=(spec_w, spec_w, spec_w, spec_w),
+            out_specs=(spec_w, spec_w, spec_w),
+            check_rep=False,
+        ), out_shardings=out_w)
         self._sync = jax.jit(shard_map(
             sync_body, mesh=mesh, in_specs=(spec_w,), out_specs=spec_w,
-        ))
+        ), out_shardings=NamedSharding(mesh, P("data")))
 
         @jax.jit
         def q_one(params, states, w):
@@ -360,15 +420,7 @@ class DistributedTrainer:
         losses = []
         min_fill = min(len(b) for b in self.buffers)
         if min_fill >= cfg.train_batch_size:
-            for _ in range(cfg.updates_per_episode):
-                batch = self._stacked_sample()
-                if cfg.sync_mode == "step":
-                    self.params, self.opt_state, loss = self._ddp_update(
-                        self.params, self.target_params, self.opt_state, batch)
-                else:
-                    self.params, self.opt_state, loss = self._local_update(
-                        self.params, self.target_params, self.opt_state, batch)
-                losses.append(float(jnp.mean(loss)))
+            losses = self.run_updates(cfg.updates_per_episode)
 
         if cfg.sync_mode == "episode":
             self.params = self._sync(self.params)
@@ -463,9 +515,85 @@ class DistributedTrainer:
         return OptState(step=opt_state.step, mu=self._sync(opt_state.mu),
                         nu=self._sync(opt_state.nu))
 
+    # ------------------------------------------------------------ #
+    # learner: replay sampling + update dispatch (LEARNER_MODES)
+    # ------------------------------------------------------------ #
+    def _stacked_sample_np(self) -> dict[str, np.ndarray]:
+        """Seed path host work: one DENSE float32 sample per worker buffer,
+        stacked to ``[W, B, ...]`` (what `_stacked_sample` ships)."""
+        per = [b.sample(self.cfg.train_batch_size, self.cfg.max_candidates)
+               for b in self.buffers]
+        return {k: np.stack([p[k] for p in per]) for k in per[0]}
+
+    def _stacked_sample_packed_np(self) -> dict[str, np.ndarray]:
+        """Packed path host work: uint8 bit planes + scalars, stacked to
+        ``[W, B, ...]`` — ~32x fewer bytes than ``_stacked_sample_np`` and
+        no host-side unpack at all.  Draws the SAME per-buffer seeded
+        indices as the dense sampler, which is what makes the two learner
+        paths loss-trajectory-identical (tests/test_learner.py)."""
+        per = [b.sample_packed(self.cfg.train_batch_size, self.cfg.max_candidates)
+               for b in self.buffers]
+        return {k: np.stack([p[k] for p in per]) for k in per[0]}
+
+    def _ship(self, host_batch: dict[str, np.ndarray]) -> dict[str, jnp.ndarray]:
+        self.h2d_update_bytes += packed_nbytes(host_batch)
+        return {k: jnp.asarray(v) for k, v in host_batch.items()}
+
     def _stacked_sample(self) -> dict[str, jnp.ndarray]:
-        per = [b.sample(self.cfg.train_batch_size, self.cfg.max_candidates) for b in self.buffers]
-        return {k: jnp.asarray(np.stack([p[k] for p in per])) for k in per[0]}
+        return self._ship(self._stacked_sample_np())
+
+    def _stacked_sample_packed(self) -> dict[str, jnp.ndarray]:
+        return self._ship(self._stacked_sample_packed_np())
+
+    def _update_once(self, batch: dict[str, jnp.ndarray], packed: bool):
+        """One optimiser step under the configured sync mode; returns the
+        per-worker loss vector still on device (don't block the pipeline)."""
+        if self.cfg.sync_mode == "step":
+            fn = self._ddp_update_packed if packed else self._ddp_update
+        else:
+            fn = self._local_update_packed if packed else self._local_update
+        self.params, self.opt_state, loss = fn(
+            self.params, self.target_params, self.opt_state, batch)
+        self.n_updates += 1
+        return loss
+
+    def _get_sampler(self) -> ThreadPoolExecutor:
+        if self._sampler_pool is None:
+            self._sampler_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="replay-sample")
+        return self._sampler_pool
+
+    def run_updates(self, n: int) -> list[float]:
+        """``n`` optimiser steps from the replay buffers under
+        ``cfg.learner``.  ``packed_pipelined`` double-buffers: the sampler
+        thread gathers update k+1's packed batch while update k runs on
+        device (sound because nothing writes the buffers between updates
+        and the single sampler thread drains each buffer's RNG stream in
+        order — so every path sees identical batches)."""
+        if n <= 0:
+            return []   # before the eager submit below: a zero-update call
+            # must not advance the buffers' sample RNG streams
+        mode = self.cfg.learner
+        if mode == "dense":
+            return [float(jnp.mean(self._update_once(self._stacked_sample(),
+                                                     packed=False)))
+                    for _ in range(n)]
+        if mode == "packed":
+            return [float(jnp.mean(self._update_once(self._stacked_sample_packed(),
+                                                     packed=True)))
+                    for _ in range(n)]
+        pool = self._get_sampler()
+        fut = pool.submit(self._stacked_sample_packed_np)
+        device_losses = []
+        for k in range(n):
+            host_batch = fut.result()
+            if k + 1 < n:
+                fut = pool.submit(self._stacked_sample_packed_np)
+            # the update dispatch is async: XLA computes while the sampler
+            # thread gathers; only the final float() conversions block
+            device_losses.append(
+                self._update_once(self._ship(host_batch), packed=True))
+        return [float(jnp.mean(l)) for l in device_losses]
 
     def train(self, episodes: int | None = None, log_every: int = 0) -> list[dict]:
         stats = []
@@ -527,9 +655,3 @@ def optimization_failure_rate(records: list[StepRecord], *, bde_max: float = 76.
     )
     return 1.0 - ok / len(records)
 
-
-def _bucket(n: int, sizes=(64, 128, 256, 512, 1024, 2048, 4096)) -> int:
-    for s in sizes:
-        if n <= s:
-            return s
-    return ((n + 4095) // 4096) * 4096

@@ -1,0 +1,76 @@
+"""jit-side unpack of bit-packed replay batches.
+
+The packed learner path ships ``ReplayBuffer.sample_packed`` output to the
+device as uint8 bit planes (32x less H2D traffic than the dense float32
+layout) and reconstructs the dense train-step arrays INSIDE the jit'd
+update — XLA fuses the unpack into the consumers, so the full ``[W, B, C,
+FP_BITS+1]`` float32 tensor never crosses the host/device boundary.
+
+``unpack_bits`` reproduces ``np.unpackbits`` (big-endian within each byte)
+with shifts + masks, and ``densify_batch`` is the exact jnp twin of
+``repro.core.replay.densify_sample`` — the equivalence tests pin the two to
+produce bit-identical training batches, which is what makes the packed
+learner's loss trajectory match the seed path bit for bit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.chem.fingerprint import FP_BITS
+
+
+def unpack_bits(packed: jnp.ndarray, n_bits: int | None = None) -> jnp.ndarray:
+    """uint8 [..., n_bytes] -> float32 [..., n_bytes*8] of exact {0.0, 1.0}.
+
+    Bit order matches ``np.unpackbits`` (MSB of byte i becomes bit 8i)."""
+    shifts = jnp.arange(7, -1, -1, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)
+    out = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * 8,))
+    if n_bits is not None:
+        out = out[..., :n_bits]
+    return out.astype(jnp.float32)
+
+
+def densify_batch(packed: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
+    """Packed batch -> the dense layout the double-DQN loss consumes.
+
+    Works for any leading batch dims (the trainer passes ``[W, B, ...]``
+    stacked batches through ``shard_map``, so each device unpacks only its
+    resident worker shard).  Candidate rows past each transition's count —
+    and every row of terminal transitions — are zeroed, exactly like the
+    host-side ``densify_sample``.
+    """
+    states = jnp.concatenate(
+        [unpack_bits(packed["state_bits"]), packed["state_frac"][..., None]],
+        axis=-1)
+    C = packed["next_bits"].shape[-2]
+    eff = jnp.where(packed["dones"] > 0, 0,
+                    jnp.minimum(packed["next_counts"], C))
+    next_mask = (jnp.arange(C) < eff[..., None]).astype(jnp.float32)
+    next_fps = jnp.concatenate(
+        [unpack_bits(packed["next_bits"]) * next_mask[..., None],
+         (packed["next_frac"][..., None] * next_mask)[..., None]],
+        axis=-1)
+    return {"states": states, "rewards": packed["rewards"],
+            "dones": packed["dones"], "next_fps": next_fps,
+            "next_mask": next_mask}
+
+
+def packed_nbytes(packed: dict) -> int:
+    """Host->device bytes a packed (or dense) batch dict ships."""
+    return int(sum(v.nbytes for v in packed.values()))
+
+
+def dense_nbytes_equivalent(packed: dict) -> int:
+    """What the same batch would ship in the seed dense float32 layout
+    (states/rewards/dones/next_fps/next_mask) — the H2D-reduction metric."""
+    b_shape = packed["state_bits"].shape[:-1]      # [..., B]
+    C = packed["next_bits"].shape[-2]
+    rows = 1
+    for d in b_shape:
+        rows *= d
+    return 4 * (rows * (FP_BITS + 1)          # states
+                + rows + rows                 # rewards, dones
+                + rows * C * (FP_BITS + 1)    # next_fps
+                + rows * C)                   # next_mask

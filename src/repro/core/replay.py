@@ -6,6 +6,27 @@ successor state (needed for the double-DQN max).  At 2048 bits a raw
 float32 layout would cost ~1.2 MB per transition (~150 candidates); packing
 to bits brings it to ~40 KB, which is what makes a 4000-entry buffer per
 worker viable — the same engineering pressure the paper's §3.6 reacts to.
+
+Two implementations share the semantics:
+
+``ReplayBuffer``      structure-of-arrays ring storage.  ``add`` writes one
+                      row of each preallocated array (the candidate axis and
+                      the row axis grow geometrically to their caps, so
+                      small buffers stay small); ``sample`` is pure
+                      vectorized fancy indexing — no per-transition Python
+                      loop, and the dense reconstruction needs exactly ONE
+                      batched ``np.unpackbits`` per field.
+                      ``sample_packed`` skips the unpack entirely and
+                      returns the uint8 bit planes + scalar features: the
+                      learner ships those to the device (32x less H2D
+                      traffic) and unpacks inside the jit'd update step
+                      (``repro.core.packed_batch.densify_batch`` is the
+                      jit-side twin of the host densify here).
+``ListReplayBuffer``  the seed ``list[Transition]`` implementation, kept as
+                      the CORRECTNESS REFERENCE: tests/test_replay.py pins
+                      seeded ``sample()`` equivalence of the two, and
+                      benchmarks/bench_train.py measures the host-sample
+                      speedup against it.
 """
 
 from __future__ import annotations
@@ -16,6 +37,8 @@ from typing import Iterable
 import numpy as np
 
 from repro.chem.fingerprint import FP_BITS
+
+FP_BYTES = FP_BITS // 8
 
 
 @dataclass
@@ -36,8 +59,188 @@ def unpack_fp(packed: np.ndarray, n_bits: int = FP_BITS) -> np.ndarray:
     return np.unpackbits(packed, axis=-1)[..., :n_bits].astype(np.float32)
 
 
+def densify_sample(packed: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Packed sample -> the dense train-step layout (host-side twin of
+    ``repro.core.packed_batch.densify_batch``; keep the two in lockstep).
+
+    Candidate rows past each transition's count — and ALL rows of terminal
+    transitions — are zeroed, exactly like the reference per-row loop."""
+    bits, counts = packed["next_bits"], packed["next_counts"]
+    B, C = bits.shape[0], bits.shape[1]
+    states = np.empty((B, FP_BITS + 1), np.float32)
+    states[:, :FP_BITS] = np.unpackbits(packed["state_bits"], axis=-1)
+    states[:, FP_BITS] = packed["state_frac"]
+    eff = np.where(packed["dones"] > 0, 0, np.minimum(counts, C))
+    next_mask = (np.arange(C)[None, :] < eff[:, None]).astype(np.float32)
+    next_fps = np.empty((B, C, FP_BITS + 1), np.float32)
+    if C:
+        next_fps[..., :FP_BITS] = np.unpackbits(bits, axis=-1) * next_mask[..., None]
+    next_fps[..., FP_BITS] = packed["next_frac"][:, None] * next_mask
+    return {"states": states, "rewards": packed["rewards"],
+            "dones": packed["dones"], "next_fps": next_fps,
+            "next_mask": next_mask}
+
+
 class ReplayBuffer:
-    """Uniform-sampling ring buffer (paper Table 3: size 4000)."""
+    """Uniform-sampling SoA ring buffer (paper Table 3: size 4000).
+
+    ``max_candidates`` bounds the stored successor set per transition
+    (``None`` = keep every candidate); the trainer passes its replay
+    truncation target so storage never holds rows ``sample`` would drop.
+    Row and candidate capacities grow geometrically up to their caps, so
+    the arrays a mostly-empty buffer owns stay proportional to what was
+    actually added.
+    """
+
+    def __init__(self, capacity: int = 4000, seed: int = 0,
+                 max_candidates: int | None = None):
+        self.capacity = capacity
+        self.max_candidates = max_candidates
+        self._rng = np.random.default_rng(seed)
+        self._size = 0
+        self._pos = 0
+        self._rows = 0          # allocated rows (<= capacity)
+        self._cand_cap = 0      # allocated candidate axis
+        self._state_bits = np.zeros((0, FP_BYTES), np.uint8)
+        self._state_frac = np.zeros((0,), np.float32)
+        self._rewards = np.zeros((0,), np.float32)
+        self._dones = np.zeros((0,), bool)
+        self._next_bits = np.zeros((0, 0, FP_BYTES), np.uint8)
+        self._next_frac = np.zeros((0,), np.float32)
+        self._next_counts = np.zeros((0,), np.int32)
+
+    def __len__(self) -> int:
+        return self._size
+
+    # ------------------------------------------------------------ #
+    # storage growth (amortised: both axes double up to their caps)
+    # ------------------------------------------------------------ #
+    def _grow_rows(self, need: int) -> None:
+        rows = min(self.capacity, max(need, 64, 2 * self._rows))
+        def grow(a, shape):
+            out = np.zeros(shape, a.dtype)
+            out[: a.shape[0]] = a
+            return out
+        self._state_bits = grow(self._state_bits, (rows, FP_BYTES))
+        self._state_frac = grow(self._state_frac, (rows,))
+        self._rewards = grow(self._rewards, (rows,))
+        self._dones = grow(self._dones, (rows,))
+        self._next_bits = grow(self._next_bits, (rows, self._cand_cap, FP_BYTES))
+        self._next_frac = grow(self._next_frac, (rows,))
+        self._next_counts = grow(self._next_counts, (rows,))
+        self._rows = rows
+
+    def _grow_candidates(self, need: int) -> None:
+        cap = max(need, 2 * self._cand_cap, 8)
+        if self.max_candidates is not None:
+            cap = min(max(cap, need), self.max_candidates)
+        out = np.zeros((self._rows, cap, FP_BYTES), np.uint8)
+        out[:, : self._cand_cap] = self._next_bits
+        self._next_bits = out
+        self._cand_cap = cap
+
+    # ------------------------------------------------------------ #
+    def add(self, t: Transition) -> None:
+        k = t.next_fps.shape[0]
+        if self.max_candidates is not None:
+            k = min(k, self.max_candidates)
+        pos = self._pos
+        if pos >= self._rows:
+            self._grow_rows(pos + 1)
+        if k > self._cand_cap:
+            self._grow_candidates(k)
+        self._state_bits[pos] = t.state_fp
+        self._state_frac[pos] = t.steps_left_frac
+        self._rewards[pos] = t.reward
+        self._dones[pos] = t.done
+        self._next_bits[pos, :k] = t.next_fps[:k]
+        self._next_bits[pos, k:] = 0          # clear the evicted row's tail
+        self._next_frac[pos] = t.next_steps_left_frac
+        self._next_counts[pos] = k
+        self._size = min(self._size + 1, self.capacity)
+        self._pos = (pos + 1) % self.capacity
+
+    def add_many(self, ts: "Iterable[Transition]") -> None:
+        """Insertion-order bulk add (the rollout engine's per-worker flush)."""
+        for t in ts:
+            self.add(t)
+
+    # ------------------------------------------------------------ #
+    # sampling: one seeded index draw + pure fancy-indexing gathers
+    # ------------------------------------------------------------ #
+    def _draw(self, batch_size: int) -> np.ndarray:
+        if self._size == 0:
+            raise ValueError("empty replay buffer")
+        return self._rng.integers(0, self._size, size=batch_size)
+
+    def _gather_packed(self, idx: np.ndarray, C: int) -> dict[str, np.ndarray]:
+        k = min(C, self._cand_cap)
+        next_bits = np.zeros((idx.shape[0], C, FP_BYTES), np.uint8)
+        if k:
+            next_bits[:, :k] = self._next_bits[idx, :k]
+        return {
+            "state_bits": self._state_bits[idx],
+            "state_frac": self._state_frac[idx],
+            "rewards": self._rewards[idx],
+            "dones": self._dones[idx].astype(np.float32),
+            "next_bits": next_bits,
+            "next_frac": self._next_frac[idx],
+            "next_counts": np.minimum(self._next_counts[idx], C).astype(np.int32),
+        }
+
+    def sample_packed(self, batch_size: int, max_candidates: int = 160
+                      ) -> dict[str, np.ndarray]:
+        """Packed uint8 bit planes + scalar features — what the packed
+        learner ships to the device (32x smaller than the dense layout):
+
+        state_bits  u8[B, FP_BITS/8]   state_frac  f32[B]
+        rewards     f32[B]             dones       f32[B]
+        next_bits   u8[B, C, FP_BITS/8] (zero past each count)
+        next_frac   f32[B]             next_counts i32[B]
+
+        Draws the SAME seeded indices as ``sample`` would have.
+        """
+        return self._gather_packed(self._draw(batch_size), max_candidates)
+
+    def sample(self, batch_size: int, max_candidates: int = 160) -> dict[str, np.ndarray]:
+        """Returns dense arrays for the jit'd train step.
+
+        states   f32[B, FP_BITS+1]
+        rewards  f32[B]
+        dones    f32[B]
+        next_fps f32[B, C, FP_BITS+1]  (zero-padded)
+        next_mask f32[B, C]
+        """
+        return densify_sample(
+            self._gather_packed(self._draw(batch_size), max_candidates))
+
+    # ------------------------------------------------------------ #
+    # compatibility / introspection
+    # ------------------------------------------------------------ #
+    @property
+    def _items(self) -> list[Transition]:
+        """Materialise the ring as ``Transition`` objects in slot order —
+        exactly the ``ListReplayBuffer._items`` layout (insertion order
+        until the first wraparound, then cyclic overwrite order)."""
+        return [
+            Transition(
+                state_fp=self._state_bits[i].copy(),
+                steps_left_frac=float(self._state_frac[i]),
+                reward=float(self._rewards[i]),
+                done=bool(self._dones[i]),
+                next_fps=self._next_bits[i, : self._next_counts[i]].copy(),
+                next_steps_left_frac=float(self._next_frac[i]),
+            )
+            for i in range(self._size)
+        ]
+
+
+class ListReplayBuffer:
+    """The seed list-based ring buffer — kept as the correctness reference
+    for ``ReplayBuffer`` (seeded-sample equivalence pinned in
+    tests/test_replay.py) and as the baseline in benchmarks/bench_train.py.
+    Its ``sample`` loops over transitions calling ``np.unpackbits`` per row:
+    O(B) Python iterations per draw, dense float32 output only."""
 
     def __init__(self, capacity: int = 4000, seed: int = 0):
         self.capacity = capacity
@@ -56,19 +259,10 @@ class ReplayBuffer:
         self._pos = (self._pos + 1) % self.capacity
 
     def add_many(self, ts: "Iterable[Transition]") -> None:
-        """Insertion-order bulk add (the rollout engine's per-worker flush)."""
         for t in ts:
             self.add(t)
 
     def sample(self, batch_size: int, max_candidates: int = 160) -> dict[str, np.ndarray]:
-        """Returns dense arrays for the jit'd train step.
-
-        states   f32[B, FP_BITS+1]
-        rewards  f32[B]
-        dones    f32[B]
-        next_fps f32[B, C, FP_BITS+1]  (zero-padded)
-        next_mask f32[B, C]
-        """
         n = len(self._items)
         if n == 0:
             raise ValueError("empty replay buffer")

@@ -1,0 +1,4 @@
+from repro.kernels.packed_qnet.ops import pack_w1, packed_qnet
+from repro.kernels.packed_qnet.ref import packed_qnet_ref
+
+__all__ = ["pack_w1", "packed_qnet", "packed_qnet_ref"]

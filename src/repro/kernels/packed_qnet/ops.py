@@ -1,0 +1,55 @@
+"""jit'd wrapper: adapts QNetwork param pytrees, packs W1 into bit-plane
+slices, pads row counts, and picks the implementation:
+
+* ``impl="pallas"`` — the fused bit-plane kernel (interpret mode off-TPU);
+* ``impl="xla"``    — unpack-in-jit + dense forward (the portable default
+                      everywhere but TPU);
+* ``impl=None``     — pallas on TPU, xla otherwise.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.chem.fingerprint import FP_BITS
+from repro.kernels.packed_qnet.packed_qnet import ROW_BLOCK, packed_qnet_rows
+from repro.kernels.packed_qnet.ref import packed_qnet_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_w1(w1: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """W1 [FP_BITS+1, H1] -> (w1r [8, FP_BITS/8, H1], w1f [1, H1]).
+
+    ``w1r[k, i] == w1[8*i + k]``: bit-plane k of byte i (np.unpackbits
+    order, MSB first) multiplies exactly the weight rows its bits select."""
+    wbits = w1[:FP_BITS].reshape(FP_BITS // 8, 8, -1).transpose(1, 0, 2)
+    return wbits, w1[FP_BITS:]
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def packed_qnet(params: dict, bits: jnp.ndarray, frac: jnp.ndarray, *,
+                impl: str | None = None, interpret: bool | None = None) -> jnp.ndarray:
+    """params: QNetwork pytree ({"layers": [{"w","b"}, ...x5]});
+    bits u8 [N, FP_BITS/8]; frac f32 [N] -> q f32 [N]."""
+    weights = [(l["w"], l["b"]) for l in params["layers"]]
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return packed_qnet_ref(bits, frac, weights)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = bits.shape[0]
+    padded = ((n + ROW_BLOCK - 1) // ROW_BLOCK) * ROW_BLOCK
+    if padded != n:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((padded - n, bits.shape[1]), bits.dtype)])
+        frac = jnp.concatenate([frac, jnp.zeros((padded - n,), frac.dtype)])
+    w1r, w1f = pack_w1(weights[0][0])
+    q = packed_qnet_rows(bits, frac[:, None].astype(jnp.float32), w1r, w1f,
+                         weights[0][1], weights[1:], interpret=interpret)
+    return q[:n]

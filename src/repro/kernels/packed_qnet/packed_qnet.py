@@ -1,0 +1,98 @@
+"""Fused DQN Q-network evaluation from PACKED fingerprints (Pallas TPU).
+
+``fused_qnet`` already keeps the whole MolDQN MLP resident in VMEM, but it
+still reads a DENSE float32 ``[N, 2049]`` input from HBM — 8 KB per row for
+what is fundamentally 2048 bits + one scalar.  The learner's replay batches
+arrive bit-packed (``ReplayBuffer.sample_packed``), so this kernel consumes
+them directly: uint8 ``[N, 256]`` bit planes + a ``[N, 1]`` steps-left
+column, 32x less input HBM traffic per row.
+
+Because the fingerprint input is binary, the first 2049->1024 layer is a
+masked row-sum of W1: row n's pre-activation is the sum of the W1 rows whose
+bit is set, plus ``frac * W1[2048]`` and the bias.  The kernel realises that
+sum on the MXU WITHOUT materialising a dense [N, 2048] unpack: byte plane k
+(bit k of every byte, an ``[N, 256]`` 0/1 matrix) multiplies the strided
+weight slice ``W1[k::8]`` (prepacked as ``w1r[8, 256, 1024]`` by ops.py),
+and the 8 bit-plane matmuls accumulate —
+
+    h1 = sum_k bits_k @ w1r[k] + frac @ w1f + b1
+
+which is algebraically the dense ``x @ W1`` with the 2048-term reduction
+re-associated into 8 x 256 (hence the 1e-5 parity tolerance vs the dense
+reference instead of bit equality).  Layers 2..5 are then fused exactly as
+in ``fused_qnet``.
+
+  VMEM budget (f32): w1r 8.0 MiB + W2 2.0 MiB + W3/W4/W5 <0.3 MiB
+                     + packed x block (128 x 256 u8) 32 KiB + h 0.5 MiB
+                     ~= 11 MiB
+
+Grid = (row blocks,): one packed pass over HBM for x, one output write.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _packed_qnet_kernel(bits_ref, frac_ref, w1r, w1f, b1,
+                        w2, b2, w3, b3, w4, b4, w5, b5, out_ref):
+    # unpack-on-the-fly: 8 bit-plane matmuls accumulate layer 1 on the MXU
+    bytes32 = bits_ref[...].astype(jnp.int32)            # [rows, 256]
+    frac = frac_ref[...].astype(jnp.float32)             # [rows, 1]
+    h = jax.lax.dot_general(
+        frac, w1f[...], (((1,), (0,)), ((), ()))) + b1[...]
+    for k in range(8):                                   # np.unpackbits order:
+        plane = ((bytes32 >> (7 - k)) & 1).astype(jnp.float32)  # bit k = MSB-k
+        h = h + jax.lax.dot_general(
+            plane, w1r[...][k], (((1,), (0,)), ((), ())))
+    h = jnp.maximum(h, 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w2[...], (((1,), (0,)), ((), ()))) + b2[...], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w3[...], (((1,), (0,)), ((), ()))) + b3[...], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w4[...], (((1,), (0,)), ((), ()))) + b4[...], 0.0)
+    q = jax.lax.dot_general(h, w5[...], (((1,), (0,)), ((), ()))) + b5[...]
+    out_ref[...] = q[:, 0]
+
+
+def packed_qnet_rows(
+    bits: jnp.ndarray,         # uint8 [N, FP_BITS/8]
+    frac: jnp.ndarray,         # f32 [N, 1] steps-left feature column
+    w1r: jnp.ndarray,          # f32 [8, FP_BITS/8, H1] bit-plane slices of W1
+    w1f: jnp.ndarray,          # f32 [1, H1] the steps-left row of W1
+    b1: jnp.ndarray,           # f32 [H1]
+    tail: list[tuple[jnp.ndarray, jnp.ndarray]],  # [(w, b)] layers 2..5
+    *,
+    row_block: int = ROW_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    N, n_bytes = bits.shape
+    assert len(tail) == 4, "packed kernel is specialised to the MolDQN 5-layer MLP"
+    row_block = min(row_block, N)
+    assert N % row_block == 0, f"rows {N} % block {row_block}"
+    grid = (N // row_block,)
+
+    full = lambda w: pl.BlockSpec(w.shape, lambda i: (0,) * w.ndim)
+    in_specs = [
+        pl.BlockSpec((row_block, n_bytes), lambda i: (i, 0)),
+        pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        full(w1r), full(w1f), full(b1),
+    ]
+    flat_w = [w1r, w1f, b1]
+    for w, b in tail:
+        in_specs += [full(w), full(b)]
+        flat_w += [w, b]
+
+    return pl.pallas_call(
+        _packed_qnet_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(bits, frac, *flat_w)

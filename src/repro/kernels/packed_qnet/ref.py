@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: unpack-in-jit + the dense QNetwork forward.
+
+This is also the DEFAULT PORTABLE PATH for packed Q evaluation (what
+``ops.packed_qnet`` runs off-TPU): XLA unpacks the bit planes in-jit and
+fuses the {0,1} float matmul — no Pallas required, identical math to
+``QNetwork.apply`` on the densified input.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packed_batch import unpack_bits
+from repro.kernels.fused_qnet.ref import qnet_ref
+
+
+def packed_qnet_ref(bits: jnp.ndarray, frac: jnp.ndarray,
+                    weights: list[tuple[jnp.ndarray, jnp.ndarray]]) -> jnp.ndarray:
+    """bits u8 [..., FP_BITS/8], frac f32 [...] -> q f32 [...]."""
+    x = jnp.concatenate([unpack_bits(bits), frac[..., None]], axis=-1)
+    return qnet_ref(x, weights)

@@ -29,6 +29,8 @@ from repro.checkpoint import CheckpointManager
 
 
 def main() -> None:
+    from repro.core.distributed import LEARNER_MODES, ROLLOUT_MODES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("rl", "lm"), default="rl")
     # rl args
@@ -36,9 +38,10 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--mols-per-worker", type=int, default=4)
     ap.add_argument("--sync", choices=("episode", "step"), default="episode")
-    ap.add_argument("--rollout",
-                    choices=("fleet", "fleet_sharded", "fleet_pipelined", "per_worker"),
-                    default="fleet", help="acting path (see core.distributed)")
+    ap.add_argument("--rollout", choices=ROLLOUT_MODES, default="fleet",
+                    help="acting path (see core.distributed)")
+    ap.add_argument("--learner", choices=LEARNER_MODES, default="packed",
+                    help="replay->update path (see core.distributed)")
     ap.add_argument("--ckpt-dir", default=".cache/rl_ckpt")
     # lm args
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -74,7 +77,7 @@ def train_rl(args) -> None:
     cfg = TrainerConfig(
         n_workers=args.workers, mols_per_worker=args.mols_per_worker,
         episodes=args.episodes, sync_mode=args.sync, rollout=args.rollout,
-        dqn=DQNConfig(epsilon_decay=0.97))
+        learner=args.learner, dqn=DQNConfig(epsilon_decay=0.97))
     trainer = DistributedTrainer(cfg, train[:n_mols], service, rcfg)
     mgr = CheckpointManager(args.ckpt_dir)
 

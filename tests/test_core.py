@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from conftest import OracleService as _OracleService
 from repro.chem.smiles import from_smiles
 from repro.core import (
     DQNConfig, EnvConfig, INVALID_CONFORMER_REWARD, ReplayBuffer, RewardConfig,
@@ -109,21 +110,6 @@ def test_greedy_action_selection(small_net):
 # ------------------------------------------------------------------ #
 # environment
 # ------------------------------------------------------------------ #
-class _OracleService:
-    """Deterministic stand-in for PropertyService (oracle-backed)."""
-
-    def __init__(self):
-        from repro.chem.conformer import has_valid_conformer
-        from repro.chem.oracle import oracle_bde, oracle_ip
-        from repro.predictors.service import Properties
-        self._p = Properties
-        self._bde, self._ip, self._ok = oracle_bde, oracle_ip, has_valid_conformer
-
-    def predict(self, mols):
-        return [self._p(bde=self._bde(m),
-                        ip=self._ip(m) if self._ok(m) else None) for m in mols]
-
-
 def test_episode_mechanics(small_net):
     cfg = EnvConfig(max_steps=3)
     env = BatchedEnv([PHENOL, BHT], cfg, seed=0)

@@ -13,20 +13,10 @@ from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
 from repro.core.agent import QNetwork
 from repro.core.distributed import DistributedTrainer
 
+from conftest import OracleService as _OracleService
+
 MOLS = [from_smiles(s) for s in
         ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
-
-
-class _OracleService:
-    def __init__(self):
-        from repro.chem.conformer import has_valid_conformer
-        from repro.chem.oracle import oracle_bde, oracle_ip
-        from repro.predictors.service import Properties
-        self._p, self._bde, self._ip, self._ok = Properties, oracle_bde, oracle_ip, has_valid_conformer
-
-    def predict(self, mols):
-        return [self._p(bde=self._bde(m), ip=self._ip(m) if self._ok(m) else None)
-                for m in mols]
 
 
 def _trainer(sync_mode: str, episodes: int = 3) -> DistributedTrainer:

@@ -5,11 +5,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.agent import QNetwork
+from repro.core.agent import DQNAgent, DQNConfig, QNetwork
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.fused_qnet.ops import fused_qnet
 from repro.kernels.fused_qnet.ref import qnet_ref
+from repro.kernels.packed_qnet.ops import pack_w1, packed_qnet
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 
@@ -136,6 +137,65 @@ def test_fused_qnet_agrees_with_agent_path():
     np.testing.assert_allclose(np.asarray(fused_qnet(params, x)),
                                np.asarray(QNetwork().apply(params, x)),
                                atol=1e-4, rtol=1e-4)
+
+
+def test_use_pallas_qnet_flag_matches_plain_agent():
+    """The DQNConfig.use_pallas_qnet acting path (interpret mode on CPU)
+    must agree with the plain jnp agent on the SAME q_values call — the
+    CI-exercised equivalence check for the fused kernel behind the flag."""
+    states = (RNG.random((50, 2049)) > 0.8).astype(np.float32)
+    qs = {}
+    for flag in (False, True):
+        agent = DQNAgent(DQNConfig(use_pallas_qnet=flag), seed=6)
+        qs[flag] = agent.q_values(states)
+    assert qs[True].shape == (50,)
+    np.testing.assert_allclose(qs[True], qs[False], atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# packed qnet: Q directly from packed uint8 fingerprints
+# ------------------------------------------------------------------ #
+def _packed_inputs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 256, size=(n, 256), dtype=np.uint8)
+    frac = rng.random(n).astype(np.float32)
+    dense = np.concatenate(
+        [np.unpackbits(bits, axis=-1).astype(np.float32), frac[:, None]], axis=-1)
+    return jnp.asarray(bits), jnp.asarray(frac), jnp.asarray(dense)
+
+
+@pytest.mark.parametrize("n", [1, 5, 128, 300])
+def test_packed_qnet_interpret_matches_qnetwork_apply(n):
+    """Acceptance gate: Pallas bit-plane kernel (interpret mode) vs the
+    dense QNetwork.apply on random packed fingerprints, <= 1e-5."""
+    params = QNetwork().init(jax.random.PRNGKey(3))
+    bits, frac, dense = _packed_inputs(n, seed=n)
+    q = packed_qnet(params, bits, frac, impl="pallas", interpret=True)
+    ref = QNetwork().apply(params, dense)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+def test_packed_qnet_xla_fallback_matches_dense():
+    """The portable unpack-in-jit path is the same math as the dense
+    forward (this is what the packed learner runs off-TPU)."""
+    params = QNetwork().init(jax.random.PRNGKey(5))
+    bits, frac, dense = _packed_inputs(77)
+    q = packed_qnet(params, bits, frac, impl="xla")
+    ref = QNetwork().apply(params, dense)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(ref), atol=1e-6, rtol=1e-6)
+
+
+def test_pack_w1_bit_plane_layout():
+    """w1r[k, i] must hold W1 row 8*i + k — the row bit k of byte i selects
+    under np.unpackbits (MSB-first) ordering."""
+    w1 = jnp.asarray(RNG.standard_normal((2049, 8)), jnp.float32)
+    w1r, w1f = pack_w1(w1)
+    assert w1r.shape == (8, 256, 8) and w1f.shape == (1, 8)
+    for k in (0, 3, 7):
+        for i in (0, 100, 255):
+            np.testing.assert_array_equal(np.asarray(w1r[k, i]),
+                                          np.asarray(w1[8 * i + k]))
+    np.testing.assert_array_equal(np.asarray(w1f[0]), np.asarray(w1[2048]))
 
 
 # ------------------------------------------------------------------ #

@@ -1,0 +1,124 @@
+"""Learner-path equivalence matrix: the packed and double-buffered update
+paths must reproduce the seed dense ``_stacked_sample`` learner's loss
+trajectory and parameters BIT FOR BIT, for both sync modes — the training
+twin of the acting matrix in tests/test_rollout.py.
+
+Bit equality holds on this backend because the in-jit unpack
+(``packed_batch.densify_batch``) reconstructs the exact {0.0, 1.0} floats
+the host densify produces, and every downstream op (dot, huber, Adam) then
+sees identical operands in identical shapes.  If a future backend fuses the
+unpack into the matmul with a different reduction order, relax the
+assertions to fp32-reduction tolerance and document it here.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chem.smiles import from_smiles
+from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
+from repro.core.agent import QNetwork
+from repro.core.distributed import LEARNER_MODES, DistributedTrainer
+from repro.core.jit_stats import jit_cache_size
+from repro.core.packed_batch import dense_nbytes_equivalent
+
+from conftest import OracleService as _OracleService
+
+MOLS = [from_smiles(s) for s in
+        ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
+
+
+def _trainer(learner: str, sync_mode: str, W: int, seed: int = 0
+             ) -> DistributedTrainer:
+    cfg = TrainerConfig(
+        n_workers=W, mols_per_worker=2, episodes=2, sync_mode=sync_mode,
+        learner=learner, updates_per_episode=3, train_batch_size=4,
+        max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
+        env=EnvConfig(max_steps=3), seed=seed)
+    mols = (MOLS * ((2 * W + len(MOLS) - 1) // len(MOLS)))[: 2 * W]
+    return DistributedTrainer(cfg, mols, _OracleService(), RewardConfig(),
+                              network=QNetwork(hidden=(32,)))
+
+
+def _run(learner: str, sync_mode: str, W: int, episodes: int = 2):
+    tr = _trainer(learner, sync_mode, W)
+    stats = [tr.train_episode() for _ in range(episodes)]
+    return tr, [s["loss"] for s in stats], jax.tree_util.tree_leaves(tr.params)
+
+
+# ------------------------------------------------------------------ #
+# the equivalence matrix: every learner mode == the seed dense path
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("sync_mode", ["episode", "step"])
+@pytest.mark.parametrize("W", [1, 4])
+def test_learner_mode_matrix(W, sync_mode):
+    results = {m: _run(m, sync_mode, W) for m in LEARNER_MODES}
+    _, ref_losses, ref_params = results["dense"]
+    assert any(np.isfinite(ref_losses))          # updates actually ran
+    for mode in LEARNER_MODES:
+        if mode == "dense":
+            continue
+        _, losses, params = results[mode]
+        np.testing.assert_array_equal(
+            np.asarray(losses), np.asarray(ref_losses),
+            err_msg=f"{mode} loss trajectory diverged from dense "
+                    f"(W={W}, {sync_mode})")
+        for xm, xr in zip(params, ref_params):
+            np.testing.assert_array_equal(
+                np.asarray(xm), np.asarray(xr),
+                err_msg=f"{mode} params diverged from dense (W={W}, {sync_mode})")
+
+
+def test_learner_mode_validated():
+    with pytest.raises(ValueError, match="learner"):
+        _trainer("bogus", "episode", 1)
+
+
+# ------------------------------------------------------------------ #
+# structural properties of the packed path
+# ------------------------------------------------------------------ #
+def test_packed_learner_ships_32x_fewer_bytes():
+    trs = {m: _run(m, "episode", 2)[0] for m in ("dense", "packed")}
+    dense_b, packed_b = trs["dense"].h2d_update_bytes, trs["packed"].h2d_update_bytes
+    assert trs["packed"].n_updates == trs["dense"].n_updates > 0
+    assert dense_b / packed_b > 30
+
+
+def test_packed_batch_nbytes_accounting():
+    tr = _trainer("packed", "episode", 2)
+    tr.train_episode()
+    batch = tr._stacked_sample_packed_np()
+    assert dense_nbytes_equivalent(batch) == \
+        sum(v.nbytes for v in tr._stacked_sample_np().values())
+
+
+def test_update_step_shape_discipline():
+    """Repeated update rounds reuse ONE compiled train-step shape (the
+    recompile gate the train bench enforces fleet-wide)."""
+    tr = _trainer("packed", "episode", 2)
+    tr.train_episode()                            # fills buffers + compiles
+    assert tr.n_updates > 0
+    n_shapes = jit_cache_size(tr._local_update_packed)
+    tr.run_updates(3)
+    tr.train_episode()
+    assert jit_cache_size(tr._local_update_packed) == n_shapes == 1
+
+
+def test_zero_update_round_does_not_advance_sample_rngs():
+    """run_updates(0) in pipelined mode must not eagerly draw (and then
+    discard) a batch — that would silently desync the buffers' RNG streams
+    from the other learner paths."""
+    tr = _trainer("packed_pipelined", "episode", 1)
+    tr.rollout_episode()
+    states = [b._rng.bit_generator.state for b in tr.buffers]
+    assert tr.run_updates(0) == []
+    assert [b._rng.bit_generator.state for b in tr.buffers] == states
+
+
+def test_pipelined_sampler_thread_is_reused():
+    tr = _trainer("packed_pipelined", "episode", 1)
+    tr.train_episode()
+    pool = tr._sampler_pool
+    assert pool is not None
+    tr.train_episode()
+    assert tr._sampler_pool is pool

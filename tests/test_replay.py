@@ -1,0 +1,191 @@
+"""SoA replay buffer vs the seed list-based reference: ring/eviction
+semantics, seeded sample equivalence, packed-batch consistency (host densify
+== jit densify), candidate truncation and storage growth."""
+
+import numpy as np
+import pytest
+
+from repro.core.packed_batch import (
+    dense_nbytes_equivalent, densify_batch, packed_nbytes, unpack_bits,
+)
+from repro.core.replay import (
+    FP_BYTES, ListReplayBuffer, ReplayBuffer, Transition, densify_sample,
+    pack_fp,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _transition(rng, n_candidates: int, done: bool = False) -> Transition:
+    fp = (rng.random(2048) > 0.7).astype(np.float32)
+    nxt = (np.stack([pack_fp((rng.random(2048) > 0.5).astype(np.float32))
+                     for _ in range(n_candidates)])
+           if n_candidates else np.zeros((0, FP_BYTES), np.uint8))
+    return Transition(pack_fp(fp), float(rng.random()),
+                      float(rng.standard_normal()), done, nxt,
+                      float(rng.random()))
+
+
+def _fill_pair(n: int, capacity: int, seed: int = 11, max_cands: int | None = None):
+    """The SoA buffer and the list reference fed the identical stream."""
+    rng = np.random.default_rng(3)
+    soa = ReplayBuffer(capacity, seed=seed, max_candidates=max_cands)
+    ref = ListReplayBuffer(capacity, seed=seed)
+    for i in range(n):
+        t = _transition(rng, int(rng.integers(0, 7)), done=(i % 5 == 0))
+        soa.add(t)
+        ref.add(t)
+    return soa, ref
+
+
+# ------------------------------------------------------------------ #
+# ring semantics
+# ------------------------------------------------------------------ #
+def test_wraparound_matches_list_eviction_order():
+    """After 2.5x capacity of adds, slot i must hold exactly what the seed
+    list buffer holds at _items[i] (cyclic overwrite, oldest-first)."""
+    soa, ref = _fill_pair(20, capacity=8)
+    assert len(soa) == len(ref) == 8
+    for a, b in zip(soa._items, ref._items):
+        assert a.state_fp.tobytes() == b.state_fp.tobytes()
+        assert a.next_fps.tobytes() == b.next_fps.tobytes()
+        assert a.done == b.done
+        assert a.reward == np.float32(b.reward)          # stored as f32
+        assert a.steps_left_frac == np.float32(b.steps_left_frac)
+
+
+def test_partial_fill_preserves_insertion_order():
+    soa, ref = _fill_pair(5, capacity=8)
+    assert len(soa) == 5
+    assert [a.state_fp.tobytes() for a in soa._items] == \
+        [b.state_fp.tobytes() for b in ref._items]
+
+
+def test_empty_buffer_raises():
+    buf = ReplayBuffer(capacity=4, seed=0)
+    with pytest.raises(ValueError):
+        buf.sample(4)
+    with pytest.raises(ValueError):
+        buf.sample_packed(4)
+
+
+# ------------------------------------------------------------------ #
+# seeded sample equivalence to the seed list-based buffer
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("n,capacity", [(6, 16), (40, 16)])
+def test_seeded_sample_equivalence(n, capacity):
+    """Same seed, same adds -> byte-identical dense batches, repeatedly
+    (the RNG streams must stay in lockstep draw after draw)."""
+    soa, ref = _fill_pair(n, capacity)
+    for _ in range(3):
+        a = soa.sample(8, max_candidates=4)
+        b = ref.sample(8, max_candidates=4)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_sample_packed_draws_same_indices_as_sample():
+    """sample_packed + host densify == sample, under one shared RNG
+    stream (two same-seeded buffers, one call each)."""
+    soa1, _ = _fill_pair(12, capacity=16, seed=23)
+    soa2, _ = _fill_pair(12, capacity=16, seed=23)
+    dense = soa1.sample(8, max_candidates=4)
+    packed = soa2.sample_packed(8, max_candidates=4)
+    round_trip = densify_sample(packed)
+    for k in dense:
+        np.testing.assert_array_equal(round_trip[k], dense[k], err_msg=k)
+
+
+def test_jit_densify_matches_host_densify():
+    """repro.core.packed_batch.densify_batch (the in-jit unpack) is the
+    exact twin of the host-side densify — including a stacked [W, B, ...]
+    leading axis like the trainer ships."""
+    soa, _ = _fill_pair(15, capacity=16, seed=5)
+    per = [soa.sample_packed(6, max_candidates=4) for _ in range(2)]
+    stacked = {k: np.stack([p[k] for p in per]) for k in per[0]}
+    jit_dense = {k: np.asarray(v) for k, v in densify_batch(stacked).items()}
+    for w in range(2):
+        host = densify_sample(per[w])
+        for k in host:
+            np.testing.assert_array_equal(jit_dense[k][w], host[k], err_msg=k)
+
+
+def test_unpack_bits_matches_numpy():
+    raw = RNG.integers(0, 256, size=(3, 5, 32), dtype=np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(raw)),
+        np.unpackbits(raw, axis=-1).astype(np.float32))
+
+
+# ------------------------------------------------------------------ #
+# candidate truncation + storage growth
+# ------------------------------------------------------------------ #
+def test_candidate_truncation_at_max_candidates():
+    """A storage bound keeps only the first max_candidates successors —
+    exactly the rows sample() would keep at the same cap."""
+    rng = np.random.default_rng(0)
+    t = _transition(rng, 10)
+    bound = ReplayBuffer(4, seed=0, max_candidates=4)
+    bound.add(t)
+    stored = bound._items[0]
+    assert stored.next_fps.shape[0] == 4
+    np.testing.assert_array_equal(stored.next_fps, t.next_fps[:4])
+    # and the sampled batch equals the unbounded buffer sampled at C=4
+    free = ReplayBuffer(4, seed=0)
+    free.add(t)
+    a, b = bound.sample(4, max_candidates=4), free.sample(4, max_candidates=4)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_sample_truncates_below_stored_count():
+    """max_candidates at sample time below the stored count: first-C rows,
+    like the reference."""
+    soa, ref = _fill_pair(10, capacity=16, seed=9)
+    a = soa.sample(6, max_candidates=2)
+    b = ref.sample(6, max_candidates=2)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_candidate_axis_growth_preserves_rows():
+    """Adding a wide transition after narrow ones regrows the candidate
+    axis without corrupting earlier rows."""
+    rng = np.random.default_rng(1)
+    buf = ReplayBuffer(8, seed=0)
+    narrow = [_transition(rng, 2) for _ in range(3)]
+    for t in narrow:
+        buf.add(t)
+    wide = _transition(rng, 40)
+    buf.add(wide)
+    items = buf._items
+    for got, want in zip(items[:3], narrow):
+        np.testing.assert_array_equal(got.next_fps, want.next_fps)
+    np.testing.assert_array_equal(items[3].next_fps, wide.next_fps)
+    assert buf._cand_cap >= 40
+
+
+def test_overwrite_clears_stale_candidate_tail():
+    """Evicting a wide transition with a narrow one must not leak the old
+    candidate rows into samples (count drops AND bytes are zeroed)."""
+    rng = np.random.default_rng(2)
+    buf = ReplayBuffer(1, seed=0)
+    buf.add(_transition(rng, 6))
+    buf.add(_transition(rng, 1))          # overwrites the only slot
+    assert buf._next_counts[0] == 1
+    assert not buf._next_bits[0, 1:].any()
+    batch = buf.sample(4, max_candidates=8)
+    assert (batch["next_mask"].sum(-1) <= 1).all()
+
+
+# ------------------------------------------------------------------ #
+# packed-batch byte accounting (the 32x H2D claim, structurally)
+# ------------------------------------------------------------------ #
+def test_packed_batch_is_32x_smaller_than_dense():
+    soa, _ = _fill_pair(20, capacity=32, seed=4)
+    packed = soa.sample_packed(16, max_candidates=8)
+    dense = soa.sample(16, max_candidates=8)
+    ratio = sum(v.nbytes for v in dense.values()) / packed_nbytes(packed)
+    assert ratio > 30
+    assert dense_nbytes_equivalent(packed) == sum(v.nbytes for v in dense.values())

@@ -22,25 +22,10 @@ from repro.core.agent import QNetwork, candidate_capacity, candidate_capacity_ta
 from repro.core.distributed import ROLLOUT_MODES, DistributedTrainer
 from repro.core.jit_stats import jit_cache_size
 
+from conftest import OracleService as _OracleService
+
 MOLS = [from_smiles(s) for s in
         ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
-
-
-class _OracleService:
-    """Deterministic stand-in for PropertyService (oracle-backed)."""
-
-    def __init__(self):
-        from repro.chem.conformer import has_valid_conformer
-        from repro.chem.oracle import oracle_bde, oracle_ip
-        from repro.predictors.service import Properties
-        self._p, self._bde, self._ip, self._ok = \
-            Properties, oracle_bde, oracle_ip, has_valid_conformer
-        self.n_calls = 0
-
-    def predict(self, mols):
-        self.n_calls += 1
-        return [self._p(bde=self._bde(m), ip=self._ip(m) if self._ok(m) else None)
-                for m in mols]
 
 
 def _trainer(sync_mode: str, rollout: str) -> DistributedTrainer:
