@@ -1,28 +1,146 @@
-"""§3.6 environment speedup: naive-Python port vs vectorised (the paper's
-"C++ re-implementation" claim, 2.6x) + the batched-fingerprint win."""
+"""§3.6 environment speedup, measured at two levels.
+
+Micro (single molecule): the three enumeration tiers — naive Python port,
+the materialise-then-filter reference, and the production delta enumerator
+(edit descriptors, array filters, lazy Molecule materialisation) — plus the
+batched-fingerprint cost per candidate.
+
+Engine (the per-step hot path, W ∈ {64, 256, 512} workers): rolls seeded
+episodes through ``RolloutEngine`` under both candidate-chemistry paths and
+reports, per worker count
+
+* chem ms/step (enumeration + fingerprints, the engine's own counters),
+* candidate-fingerprint ms/step — the §3.6 metric: ``chem="incremental"``
+  (shared-parent incremental pass + fleet-wide ChemCache) vs the
+  ``chem="full"`` per-step recompute,
+* ChemCache hit rate.
+
+The policy is a fixed random linear Q head with per-worker ε-greedy streams
+(ε = 0.1, the post-decay exploit regime where MolDQN actually spends its
+250-episode runs); one warmup episode populates the cache, mirroring
+bench_rollout's warmup-then-measure protocol.  Both chem paths see identical
+seeded trajectories, so the comparison is work-per-step, not workload.
+
+``python benchmarks/bench_env.py --smoke`` is the CI gate: steps the full
+and incremental engines in LOCKSTEP and fails if any candidate fingerprint
+row (dense or packed) differs, or if the warm cache stops hitting.
+"""
 
 from __future__ import annotations
 
+import os
+import sys
 import time
 
+if __package__ in (None, ""):  # `python benchmarks/bench_env.py --smoke`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+
 from benchmarks.common import emit
-from repro.chem.actions import enumerate_actions, enumerate_actions_naive
+from repro.chem.actions import (
+    enumerate_actions, enumerate_actions_naive, enumerate_actions_ref)
 from repro.chem.fingerprint import batch_morgan_fingerprints
 from repro.chem.smiles import from_smiles
+from repro.core import EnvConfig, RewardConfig, RolloutEngine
+from repro.core.rollout import CHEM_MODES, STATE_DIM
 
 MOLS = ["CC1=CC(C)=CC(C)=C1O", "C1=CC=CC=C1O", "CC1=C(N)C(C)=C(N)C(C)=C1O",
         "OC1=CC=C(C=C1)C(C)(C)C"]
+
+# (W, warmup episodes, measured episodes, max env steps)
+ENGINE_PLANS = ((64, 1, 3, 6), (256, 1, 2, 4), (512, 1, 2, 3))
+EPSILON = 0.1
+
+
+class _OracleSvc:
+    """Deterministic oracle-backed property stand-in (no jax, no training —
+    keeps the engine bench focused on host chemistry)."""
+
+    def __init__(self):
+        from repro.chem.conformer import has_valid_conformer
+        from repro.chem.oracle import oracle_bde, oracle_ip
+        from repro.predictors.service import Properties
+        self._p, self._bde, self._ip, self._ok = \
+            Properties, oracle_bde, oracle_ip, has_valid_conformer
+
+    def predict(self, mols):
+        return [self._p(bde=self._bde(m), ip=self._ip(m) if self._ok(m) else None)
+                for m in mols]
+
+
+class _LinearQPolicy:
+    """Fixed random linear Q head + per-worker ε-greedy RNG streams.
+
+    Deterministic per state (like a trained, synced network), so repeated
+    episodes revisit the same trajectories up to ε-deviations — the access
+    pattern the ChemCache is built for.  Two engines driven by identically
+    seeded instances take identical actions.
+    """
+
+    def __init__(self, n_workers: int, eps: float = EPSILON, seed: int = 0):
+        self.eps = eps
+        self.w = np.random.default_rng(seed).standard_normal(STATE_DIM) \
+            .astype(np.float32)
+        self.rngs = [np.random.default_rng(seed + 101 * w)
+                     for w in range(n_workers)]
+
+    def fleet_q_values(self, per_worker):
+        return [x @ self.w for x in per_worker]
+
+    def select_action(self, q: np.ndarray, worker: int) -> int:
+        rng = self.rngs[worker]
+        if rng.random() < self.eps:
+            return int(rng.integers(0, q.shape[0]))
+        return int(np.argmax(q))
+
+
+def _engine(W: int, chem: str, max_steps: int) -> RolloutEngine:
+    from repro.data.datasets import antioxidant_dataset
+    mols = antioxidant_dataset(W)
+    return RolloutEngine([[m] for m in mols], EnvConfig(max_steps=max_steps),
+                         chem=chem)
+
+
+def _roll(W: int, chem: str, warmup: int, episodes: int, max_steps: int) -> dict:
+    engine = _engine(W, chem, max_steps)
+    svc, rcfg = _OracleSvc(), RewardConfig()
+    policy = _LinearQPolicy(W)
+    for _ in range(warmup):
+        engine.run_episode(policy, svc, rcfg)
+    engine.reset_chem_stats()
+    steps0 = engine.n_env_steps
+    t0 = time.perf_counter()
+    for _ in range(episodes):
+        engine.run_episode(policy, svc, rcfg)
+    wall = time.perf_counter() - t0
+    st = engine.chem_stats()
+    n_steps = engine.n_env_steps - steps0
+    return {
+        "chem_ms_per_step": (st["enum_s"] + st["fp_s"]) / n_steps * 1e3,
+        "enum_ms_per_step": st["enum_s"] / n_steps * 1e3,
+        "fp_ms_per_step": st["fp_s"] / n_steps * 1e3,
+        "wall_ms_per_step": wall / n_steps * 1e3,
+        "hit_rate": st.get("hit_rate", 0.0),
+    }
 
 
 def run(scale: str = "quick") -> None:
     reps = 30 if scale == "quick" else 100
     mols = [from_smiles(s) for s in MOLS]
 
+    # ---- micro: the three enumeration tiers -------------------------- #
     t0 = time.perf_counter()
     for _ in range(reps):
         for m in mols:
             enumerate_actions(m)
-    fast = (time.perf_counter() - t0) / (reps * len(mols))
+    delta = (time.perf_counter() - t0) / (reps * len(mols))
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for m in mols:
+            enumerate_actions_ref(m)
+    ref = (time.perf_counter() - t0) / (reps * len(mols))
 
     t0 = time.perf_counter()
     for _ in range(max(reps // 3, 5)):
@@ -30,10 +148,14 @@ def run(scale: str = "quick") -> None:
             enumerate_actions_naive(m)
     slow = (time.perf_counter() - t0) / (max(reps // 3, 5) * len(mols))
 
-    emit("env.enumerate_vectorised", round(fast * 1e6), "us_per_call")
+    emit("env.enumerate_delta", round(delta * 1e6), "us_per_call",
+         "edit descriptors + lazy materialisation (production)")
+    emit("env.enumerate_vectorised", round(ref * 1e6), "us_per_call",
+         "materialise-then-filter reference")
     emit("env.enumerate_naive", round(slow * 1e6), "us_per_call")
-    emit("env.speedup", round(slow / fast, 2), "x",
+    emit("env.speedup", round(slow / delta, 2), "x",
          "paper §3.6 reports 2.6x for the C++ port")
+    emit("env.delta_vs_ref_speedup", round(ref / delta, 2), "x")
 
     # batched candidate fingerprints (the per-step hot loop)
     cands = [a.result for m in mols for a in enumerate_actions(m)]
@@ -43,3 +165,82 @@ def run(scale: str = "quick") -> None:
     per = (time.perf_counter() - t0) / reps
     emit("env.batched_fp_per_candidate", round(per / len(cands) * 1e6, 1),
          "us", f"{len(cands)} candidates per batch")
+
+    # ---- engine level: chem ms/step under both chem paths ------------- #
+    for W, warmup, episodes, max_steps in ENGINE_PLANS:
+        res = {chem: _roll(W, chem, warmup, episodes, max_steps)
+               for chem in CHEM_MODES}
+        for chem in CHEM_MODES:
+            r = res[chem]
+            emit(f"env.chem.w{W}.{chem}.chem_ms_per_step",
+                 round(r["chem_ms_per_step"], 2), "ms",
+                 "enumeration + candidate fingerprints, engine counters")
+            emit(f"env.chem.w{W}.{chem}.fp_ms_per_step",
+                 round(r["fp_ms_per_step"], 2), "ms")
+            emit(f"env.chem.w{W}.{chem}.wall_ms_per_step",
+                 round(r["wall_ms_per_step"], 1), "ms")
+        emit(f"env.chem.w{W}.cache_hit_rate",
+             round(res["incremental"]["hit_rate"], 3), "frac",
+             f"warm cache, eps={EPSILON} exploit regime")
+        emit(f"env.chem.w{W}.fp_reduction",
+             round(res["full"]["fp_ms_per_step"]
+                   / max(res["incremental"]["fp_ms_per_step"], 1e-9), 2), "x",
+             "acceptance target at W=64: >= 5x")
+        emit(f"env.chem.w{W}.chem_reduction",
+             round(res["full"]["chem_ms_per_step"]
+                   / max(res["incremental"]["chem_ms_per_step"], 1e-9), 2), "x")
+
+
+# ------------------------------------------------------------------ #
+# CI smoke gate: incremental chemistry bit-identical to full, cache hits
+# ------------------------------------------------------------------ #
+def smoke(W: int = 16) -> None:
+    from repro.data.datasets import antioxidant_dataset
+
+    max_steps, svc, rcfg = 4, _OracleSvc(), RewardConfig()
+    mols = antioxidant_dataset(W)
+    engines = {chem: RolloutEngine([[m] for m in mols],
+                                   EnvConfig(max_steps=max_steps), chem=chem)
+               for chem in CHEM_MODES}
+    policies = {chem: _LinearQPolicy(W) for chem in CHEM_MODES}
+
+    for episode in range(2):
+        for chem in CHEM_MODES:
+            engines[chem].reset()
+        while not engines["full"].done:
+            for chem in CHEM_MODES:
+                engines[chem].step(policies[chem], svc, rcfg)
+            for w in range(W):
+                for sf, si in zip(engines["full"].workers[w],
+                                  engines["incremental"].workers[w]):
+                    if not np.array_equal(sf.cand_fps, si.cand_fps) or \
+                       not np.array_equal(sf.cand_fps_packed, si.cand_fps_packed):
+                        raise SystemExit(
+                            f"FAIL: candidate fingerprints diverged "
+                            f"(episode {episode}, worker {w}, slot {sf.index})")
+
+    st = engines["incremental"].chem_stats()
+    emit(f"env.smoke.w{W}.cache_hit_rate", round(st["hit_rate"], 3), "frac",
+         "gate: must be > 0.2 after a warm episode")
+    emit(f"env.smoke.w{W}.relabel_misses", st["relabel_misses"], "lookups")
+    if st["hit_rate"] <= 0.2:
+        raise SystemExit(f"FAIL: warm ChemCache hit rate {st['hit_rate']:.3f} "
+                         f"<= 0.2 — fleet-wide chem memoisation broken")
+    print(f"SMOKE PASS: W={W}, all candidate fingerprints bit-identical "
+          f"across chem modes over 2 episodes, warm hit rate "
+          f"{st['hit_rate']:.2f}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: lockstep chem-mode bit-identity + cache hits")
+    ap.add_argument("--w", type=int, default=16, help="smoke worker count")
+    ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(args.w)
+    else:
+        run(args.scale)

@@ -21,8 +21,10 @@ container, so this package implements the required subset from scratch:
 """
 
 from repro.chem.molecule import Molecule, VALENCES, ELEMENTS, ALLOWED_RING_SIZES
-from repro.chem.actions import enumerate_actions, Action
-from repro.chem.fingerprint import morgan_fingerprint, IncrementalMorgan
+from repro.chem.actions import enumerate_actions, enumerate_actions_ref, Action
+from repro.chem.chemcache import ChemCache
+from repro.chem.fingerprint import (
+    morgan_fingerprint, IncrementalMorgan, batch_fingerprints_incremental)
 from repro.chem.smiles import to_smiles, from_smiles, canonical_smiles
 from repro.chem.conformer import has_valid_conformer, conformer_features
 from repro.chem.properties import sa_score, qed_score, penalized_logp, tanimoto
@@ -30,8 +32,8 @@ from repro.chem.oracle import oracle_bde, oracle_ip, oracle_properties
 
 __all__ = [
     "Molecule", "VALENCES", "ELEMENTS", "ALLOWED_RING_SIZES",
-    "enumerate_actions", "Action",
-    "morgan_fingerprint", "IncrementalMorgan",
+    "enumerate_actions", "enumerate_actions_ref", "Action", "ChemCache",
+    "morgan_fingerprint", "IncrementalMorgan", "batch_fingerprints_incremental",
     "to_smiles", "from_smiles", "canonical_smiles",
     "has_valid_conformer", "conformer_features",
     "sa_score", "qed_score", "penalized_logp", "tanimoto",

@@ -40,7 +40,8 @@ MAX_BOND_ORDER = 3
 class Molecule:
     """A small organic molecule as an undirected bond-order graph."""
 
-    __slots__ = ("elements", "bonds", "_canon_cache", "_iso_cache")
+    __slots__ = ("elements", "bonds", "_canon_cache", "_iso_cache",
+                 "_fv_cache", "_apsp_cache")
 
     def __init__(self, elements: np.ndarray, bonds: np.ndarray):
         self.elements = np.asarray(elements, dtype=np.int8)
@@ -50,6 +51,8 @@ class Molecule:
             raise ValueError(f"bonds shape {self.bonds.shape} != ({n},{n})")
         self._canon_cache: str | None = None
         self._iso_cache: int | None = None
+        self._fv_cache: np.ndarray | None = None
+        self._apsp_cache: np.ndarray | None = None
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -102,9 +105,18 @@ class Molecule:
         return self.implicit_h(i)
 
     def free_valences(self) -> np.ndarray:
-        """Vectorised free valence for every atom: int array [n]."""
-        vals = np.asarray(VALENCES, dtype=np.int16)[self.elements]
-        return vals - self.bonds.sum(axis=1, dtype=np.int16)
+        """Vectorised free valence for every atom: int array [n].
+
+        Memoized (molecules are immutable by convention — the enumerator
+        calls this several times per step) and returned READ-ONLY; copy
+        before mutating.
+        """
+        if self._fv_cache is None:
+            vals = np.asarray(VALENCES, dtype=np.int16)[self.elements]
+            fv = vals - self.bonds.sum(axis=1, dtype=np.int16)
+            fv.flags.writeable = False
+            self._fv_cache = fv
+        return self._fv_cache
 
     def neighbors(self, i: int) -> np.ndarray:
         return np.nonzero(self.bonds[i])[0]
@@ -148,7 +160,14 @@ class Molecule:
         return -1
 
     def all_pairs_shortest_paths(self) -> np.ndarray:
-        """Hop-distance matrix via repeated BFS.  -1 for disconnected pairs."""
+        """Hop-distance matrix via repeated BFS.  -1 for disconnected pairs.
+
+        Memoized like :meth:`free_valences` (the action enumerator needs it
+        once per enumeration for the ring-size rule, the oracle again for
+        BDE); the cached array is READ-ONLY.
+        """
+        if self._apsp_cache is not None:
+            return self._apsp_cache
         n = self.num_atoms
         out = np.full((n, n), -1, dtype=np.int32)
         for s in range(n):
@@ -160,6 +179,8 @@ class Molecule:
                     if out[s, v] < 0:
                         out[s, v] = out[s, u] + 1
                         q.append(int(v))
+        out.flags.writeable = False
+        self._apsp_cache = out
         return out
 
     def connected_components(self) -> list[np.ndarray]:
@@ -351,12 +372,22 @@ _ORDER_SALT = np.array(
 
 
 def splitmix64(x: np.ndarray) -> np.ndarray:
-    """Vectorised splitmix64 finaliser over uint64 arrays (wraps mod 2^64)."""
-    z = x.astype(np.uint64, copy=True)
-    z = (z + _SM_C0)
-    z = (z ^ (z >> np.uint64(30))) * _SM_C1
-    z = (z ^ (z >> np.uint64(27))) * _SM_C2
-    return z ^ (z >> np.uint64(31))
+    """Vectorised splitmix64 finaliser over uint64 arrays (wraps mod 2^64).
+
+    In-place on a working copy: the whole chemistry layer is memory-bound on
+    this mixer's [k, m, m] temporaries, so two allocations beat eight.
+    """
+    z = x.astype(np.uint64)                  # always copies
+    z += _SM_C0
+    t = z >> np.uint64(30)
+    z ^= t
+    z *= _SM_C1
+    np.right_shift(z, np.uint64(27), out=t)
+    z ^= t
+    z *= _SM_C2
+    np.right_shift(z, np.uint64(31), out=t)
+    z ^= t
+    return z
 
 
 def initial_invariants(mol: Molecule) -> np.ndarray:
@@ -405,6 +436,30 @@ def refine_invariants(mol: Molecule, rounds: int | None = None) -> np.ndarray:
 _PAD_VALENCE = np.array(list(VALENCES) + [0], dtype=np.int64)  # index 3 = pad
 
 
+def iso_hashes_from_padded(el: np.ndarray, bonds: np.ndarray, sizes: np.ndarray,
+                           rounds: int = 5) -> np.ndarray:
+    """Batched iso hashes over prebuilt padded arrays (``el`` int64[k, m]
+    with 3 = padding element, ``bonds`` int8[k, m, m], ``sizes`` int64[k]).
+
+    The array-level core of :func:`iso_hashes_batch` — the delta action
+    enumerator calls it directly on candidate arrays built from edit
+    descriptors, skipping the per-candidate ``Molecule`` materialisation.
+    Returns uint64[k].
+    """
+    m_max = el.shape[1]
+    tot = bonds.sum(axis=2, dtype=np.int64)
+    deg = np.count_nonzero(bonds, axis=2)
+    fv = _PAD_VALENCE[el] - tot
+    packed = (((el * 64 + deg) * 64 + tot) * 64 + (fv + 8)).astype(np.uint64)
+    inv = splitmix64(packed)                              # [k, m]
+    for _ in range(rounds):
+        inv = splitmix64(splitmix64(inv) + neighbor_combine(bonds, inv))
+    inv = np.sort(inv, axis=1)
+    pos = splitmix64(np.arange(m_max, dtype=np.uint64))
+    mixed = splitmix64(inv ^ pos[None, :]).sum(axis=1, dtype=np.uint64)
+    return splitmix64(mixed ^ splitmix64(sizes.astype(np.uint64)))
+
+
 def iso_hashes_batch(mols: list["Molecule"], rounds: int = 5) -> list[int]:
     """Isomorphism-invariant hashes for a *batch* of molecules at once.
 
@@ -428,18 +483,7 @@ def iso_hashes_batch(mols: list["Molecule"], rounds: int = 5) -> list[int]:
         n = mol.num_atoms
         el[b, :n] = mol.elements
         bonds[b, :n, :n] = mol.bonds
-    tot = bonds.sum(axis=2, dtype=np.int64)
-    deg = np.count_nonzero(bonds, axis=2)
-    fv = _PAD_VALENCE[el] - tot
-    packed = (((el * 64 + deg) * 64 + tot) * 64 + (fv + 8)).astype(np.uint64)
-    inv = splitmix64(packed)                              # [k, m]
-    for _ in range(rounds):
-        inv = splitmix64(splitmix64(inv) + neighbor_combine(bonds, inv))
-    inv = np.sort(inv, axis=1)
-    pos = splitmix64(np.arange(m_max, dtype=np.uint64))
-    mixed = splitmix64(inv ^ pos[None, :]).sum(axis=1, dtype=np.uint64)
-    final = splitmix64(mixed ^ splitmix64(sizes.astype(np.uint64)))
-    return [int(h) for h in final]
+    return [int(h) for h in iso_hashes_from_padded(el, bonds, sizes, rounds)]
 
 
 def iso_hash(mol: Molecule) -> int:

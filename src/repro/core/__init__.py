@@ -30,7 +30,7 @@ Layout:
 from repro.core.reward import RewardConfig, compute_reward, INVALID_CONFORMER_REWARD
 from repro.core.agent import QNetwork, DQNAgent, DQNConfig
 from repro.core.replay import ReplayBuffer, Transition
-from repro.core.rollout import RolloutEngine, StepRecord, AgentFleetPolicy
+from repro.core.rollout import CHEM_MODES, RolloutEngine, StepRecord, AgentFleetPolicy
 from repro.core.env import MoleculeEnv, BatchedEnv, EnvConfig
 from repro.core.distributed import (
     DistributedTrainer, TrainerConfig, LEARNER_MODES, ROLLOUT_MODES,
@@ -42,7 +42,7 @@ __all__ = [
     "RewardConfig", "compute_reward", "INVALID_CONFORMER_REWARD",
     "QNetwork", "DQNAgent", "DQNConfig",
     "ReplayBuffer", "Transition",
-    "RolloutEngine", "StepRecord", "AgentFleetPolicy",
+    "RolloutEngine", "StepRecord", "AgentFleetPolicy", "CHEM_MODES",
     "MoleculeEnv", "BatchedEnv", "EnvConfig",
     "DistributedTrainer", "TrainerConfig", "LEARNER_MODES", "ROLLOUT_MODES",
     "fine_tune", "filter_molecules", "FilterCriteria",

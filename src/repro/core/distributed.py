@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.chem.chemcache import ChemCache
 from repro.chem.molecule import Molecule
 from repro.core.agent import (
     DQNAgent, DQNConfig, QNetwork, candidate_capacity, candidate_capacity_table,
@@ -82,7 +83,7 @@ from repro.core.agent import (
 from repro.core.env import BatchedEnv, EnvConfig, StepRecord
 from repro.core.packed_batch import densify_batch, packed_nbytes
 from repro.core.replay import ReplayBuffer
-from repro.core.rollout import STATE_DIM, RolloutEngine
+from repro.core.rollout import CHEM_MODES, STATE_DIM, RolloutEngine
 from repro.core.reward import RewardConfig
 from repro.launch.mesh import fleet_sharding
 from repro.optim import adam
@@ -117,6 +118,8 @@ class TrainerConfig:
     sync_mode: str = "episode"        # "episode" (DA-MolDQN) | "step" (DDP)
     rollout: str = "fleet"            # see ROLLOUT_MODES (module docstring)
     learner: str = "packed"           # see LEARNER_MODES (module docstring)
+    chem: str = "incremental"         # candidate chemistry: rollout.CHEM_MODES
+                                      # ("full" = per-step recompute reference)
     updates_per_episode: int = 4
     train_batch_size: int = 32        # <= Table 2's 512 cap; CPU-scaled
     max_candidates: int = 64          # replay target max truncation
@@ -236,18 +239,25 @@ class DistributedTrainer:
             raise ValueError(f"learner must be one of {LEARNER_MODES}, got {cfg.learner!r}")
         if cfg.sync_mode not in ("episode", "step"):
             raise ValueError(f"sync_mode must be 'episode' or 'step', got {cfg.sync_mode!r}")
+        if cfg.chem not in CHEM_MODES:
+            raise ValueError(f"chem must be one of {CHEM_MODES}, got {cfg.chem!r}")
 
         # size the predictor padding ladder for the fleet-wide per-step batch
         # (one chosen successor per live slot)
         if hasattr(service, "reserve"):
             service.reserve(W * cfg.mols_per_worker)
 
+        # ONE chemistry cache for the whole trainer: entries are shared
+        # across workers, episodes and steps (and, for the legacy
+        # per_worker path, across its per-worker envs)
+        self.chem_cache = ChemCache() if cfg.chem == "incremental" else None
         # fleet engine over the worker molecule partition: one Q dispatch
         # and one property batch per step across ALL workers
         self.engine = RolloutEngine(
             [self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker]
              for w in range(W)],
-            cfg.env, pipeline_threads=cfg.pipeline_threads)
+            cfg.env, pipeline_threads=cfg.pipeline_threads,
+            chem=cfg.chem, chem_cache=self.chem_cache)
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         # storage truncates where sample() would anyway (cfg.max_candidates),
         # so the SoA candidate axis never outgrows what training can see
@@ -293,7 +303,7 @@ class DistributedTrainer:
             self._envs = [
                 BatchedEnv(
                     self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker],
-                    cfg.env)
+                    cfg.env, chem=cfg.chem, chem_cache=self.chem_cache)
                 for w in range(cfg.n_workers)
             ]
         return self._envs

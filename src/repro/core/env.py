@@ -19,6 +19,7 @@ only predictor entry point (see PropertyService).
 
 from __future__ import annotations
 
+from repro.chem.chemcache import ChemCache
 from repro.chem.molecule import Molecule
 from repro.core.replay import ReplayBuffer
 from repro.core.reward import RewardConfig
@@ -31,14 +32,22 @@ __all__ = ["EnvConfig", "StepRecord", "BatchedEnv", "MoleculeEnv"]
 class BatchedEnv:
     """Lockstep batch of molecule episodes (one per 'slot'): a one-worker
     fleet.  ``agent`` may be anything with ``q_values``/``select_action``
-    (DQNAgent, a trainer worker view) or a full FleetPolicy."""
+    (DQNAgent, a trainer worker view) or a full FleetPolicy.
 
-    def __init__(self, molecules: list[Molecule], cfg: EnvConfig = EnvConfig(), seed: int = 0):
+    ``chem``/``chem_cache`` select the engine's candidate-chemistry path;
+    the trainer shares ONE ChemCache across all its per-worker envs, so the
+    legacy ``rollout="per_worker"`` loop still dedupes chemistry fleet-wide.
+    """
+
+    def __init__(self, molecules: list[Molecule], cfg: EnvConfig = EnvConfig(),
+                 seed: int = 0, chem: str = "full",
+                 chem_cache: ChemCache | None = None):
         # ``seed`` is kept for API stability; the environment is
         # deterministic — action stochasticity lives in the agent's RNG
         self.cfg = cfg
         self.initials = list(molecules)
-        self._engine = RolloutEngine([self.initials], cfg)
+        self._engine = RolloutEngine([self.initials], cfg, chem=chem,
+                                     chem_cache=chem_cache)
 
     # ------------------------------------------------------------ #
     @property
@@ -86,5 +95,6 @@ class BatchedEnv:
 class MoleculeEnv(BatchedEnv):
     """Single-molecule environment (original MolDQN) = batch of one."""
 
-    def __init__(self, molecule: Molecule, cfg: EnvConfig = EnvConfig(), seed: int = 0):
-        super().__init__([molecule], cfg, seed)
+    def __init__(self, molecule: Molecule, cfg: EnvConfig = EnvConfig(), seed: int = 0,
+                 chem: str = "full", chem_cache: ChemCache | None = None):
+        super().__init__([molecule], cfg, seed, chem=chem, chem_cache=chem_cache)

@@ -49,6 +49,8 @@ changes jit shapes: dead slots simply drop out of the dense batch rows.
 from __future__ import annotations
 
 import os
+import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Protocol, Sequence, runtime_checkable
@@ -56,12 +58,23 @@ from typing import Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.chem.actions import Action, enumerate_actions
-from repro.chem.fingerprint import FP_BITS, batch_morgan_fingerprints
+from repro.chem.chemcache import ChemCache, molecule_signature
+from repro.chem.fingerprint import (
+    FP_BITS, batch_morgan_fingerprints, incremental_fingerprints_grouped)
 from repro.chem.molecule import ALLOWED_RING_SIZES, Molecule
-from repro.core.replay import ReplayBuffer, Transition, pack_fp
+from repro.core.replay import ReplayBuffer, Transition, pack_fp, unpack_fp
 from repro.core.reward import RewardConfig, compute_reward
 
 STATE_DIM = FP_BITS + 1  # fingerprint ++ steps-left feature
+
+# candidate-chemistry paths (see RolloutEngine):
+#   "full"         enumerate + full fingerprint recompute every step — the
+#                  seed behaviour, kept as the pinned reference
+#   "incremental"  shared-parent batched incremental fingerprints + the
+#                  fleet-wide ChemCache (canonical-key memo of action set +
+#                  packed fingerprints); transition streams are pinned
+#                  bit-identical to "full" by tests/test_rollout.py
+CHEM_MODES = ("full", "incremental")
 
 
 @dataclass(frozen=True)
@@ -95,8 +108,9 @@ class Slot:
     initial: Molecule
     current: Molecule
     steps_left: int
-    candidates: list[Action] = field(default_factory=list)
+    candidates: Sequence[Action] = field(default_factory=list)
     cand_fps: np.ndarray | None = None        # f32[C, FP_BITS] (no steps col)
+    cand_fps_packed: np.ndarray | None = None  # u8[C, FP_BITS/8] (same rows)
     pending: Transition | None = None         # waiting for next-state candidates
     best: tuple[float, Molecule] | None = None
 
@@ -157,12 +171,23 @@ class RolloutEngine:
     """
 
     def __init__(self, worker_molecules: Sequence[Sequence[Molecule]],
-                 cfg: EnvConfig | None = None, pipeline_threads: int | None = None):
+                 cfg: EnvConfig | None = None, pipeline_threads: int | None = None,
+                 chem: str = "full", chem_cache: ChemCache | None = None):
+        if chem not in CHEM_MODES:
+            raise ValueError(f"chem must be one of {CHEM_MODES}, got {chem!r}")
         self.cfg = cfg if cfg is not None else EnvConfig()
+        self.chem = chem
+        # the cache may be shared fleet-wide (the trainer hands the same
+        # instance to every engine/env it builds)
+        self.chem_cache = chem_cache if chem_cache is not None else \
+            (ChemCache() if chem == "incremental" else None)
         self.worker_initials = [list(ms) for ms in worker_molecules]
         self.n_workers = len(self.worker_initials)
         self.workers: list[list[Slot]] = []
         self.n_env_steps = 0
+        self.chem_enum_s = 0.0   # host seconds in candidate enumeration
+        self.chem_fp_s = 0.0     # host seconds in candidate fingerprints
+        self._stats_lock = threading.Lock()  # pipelined threads accumulate
         self._enumerated = False
         # leave a core for the main thread (property featurize + the XLA
         # dispatch): oversubscribing a small host makes the overlap a loss
@@ -201,43 +226,111 @@ class RolloutEngine:
     # ------------------------------------------------------------ #
     # candidate enumeration + fingerprinting
     # ------------------------------------------------------------ #
+    def _enumerate_one(self, m: Molecule) -> list[Action]:
+        return enumerate_actions(
+            m,
+            allow_removal=self.cfg.allow_removal,
+            protect_oh=self.cfg.protect_oh,
+            allowed_ring_sizes=self.cfg.allowed_ring_sizes,
+            max_atoms=self.cfg.max_atoms,
+        )
+
     def _compute_enum(self, mols: Sequence[Molecule]
-                      ) -> list[tuple[list[Action], np.ndarray]]:
-        """Pure per-molecule work: candidate actions + their fingerprints.
-        Thread-safe (reads molecules, builds fresh ones); per-slot results
-        do not depend on how the molecule list is sharded across calls."""
-        cands = [
-            enumerate_actions(
-                m,
-                allow_removal=self.cfg.allow_removal,
-                protect_oh=self.cfg.protect_oh,
-                allowed_ring_sizes=self.cfg.allowed_ring_sizes,
-                max_atoms=self.cfg.max_atoms,
-            )
-            for m in mols
-        ]
+                      ) -> list[tuple[Sequence[Action], np.ndarray, np.ndarray]]:
+        """Pure per-molecule work: candidate actions, their fingerprints
+        (dense f32 rows for the Q states) and the SAME rows bit-packed (what
+        the replay successor sets store).  Thread-safe (reads molecules,
+        builds fresh ones; the chem cache locks internally); per-slot
+        results do not depend on how the molecule list is sharded across
+        calls — cache hits return values identical to a fresh compute.
+        """
+        if self.chem == "incremental":
+            return self._compute_enum_incremental(mols)
+        t0 = time.perf_counter()
+        cands = [self._enumerate_one(m) for m in mols]
+        t1 = time.perf_counter()
+        # the full path materialises every candidate and recomputes every
+        # fingerprint from scratch — the pinned reference behaviour
         flat = [a.result for acts in cands for a in acts]
         fps = batch_morgan_fingerprints(flat) if flat else \
             np.zeros((0, FP_BITS), np.float32)
+        packed = np.packbits(fps.astype(bool), axis=-1)
+        t2 = time.perf_counter()
+        with self._stats_lock:
+            self.chem_enum_s += t1 - t0
+            self.chem_fp_s += t2 - t1
         out, off = [], 0
         for acts in cands:
-            out.append((acts, fps[off:off + len(acts)]))
+            out.append((acts, fps[off:off + len(acts)],
+                        packed[off:off + len(acts)]))
             off += len(acts)
         return out
 
+    def _compute_enum_incremental(self, mols: Sequence[Molecule]
+                                  ) -> list[tuple[Sequence[Action], np.ndarray, np.ndarray]]:
+        """The tentpole path: fleet-wide ChemCache lookups short-circuit the
+        whole per-parent chemistry; misses enumerate (delta descriptors) and
+        derive all candidate fingerprints from ONE shared parent env-hash
+        table per slot, batched across the miss slots."""
+        cache = self.chem_cache
+        t0 = time.perf_counter()
+        out: list = [None] * len(mols)
+        miss: list[int] = []
+        for i, m in enumerate(mols):
+            entry = cache.get(m) if cache is not None else None
+            if entry is not None:
+                out[i] = (entry.actions, None, entry.packed_fps)
+            else:
+                miss.append(i)
+        # in-batch dedup (the PropertyService idiom): workers sharing a
+        # concrete parent — e.g. every slot at episode start — enumerate it
+        # ONCE per step and share the (immutable) results
+        uniq: list[int] = []
+        rep_of: dict[bytes, int] = {}
+        dup_of: dict[int, int] = {}
+        for i in miss:
+            sig = molecule_signature(mols[i])
+            if sig in rep_of:
+                dup_of[i] = rep_of[sig]
+            else:
+                rep_of[sig] = i
+                uniq.append(i)
+        acts_by = [self._enumerate_one(mols[i]) for i in uniq]
+        t1 = time.perf_counter()
+        if uniq:
+            fps_by = incremental_fingerprints_grouped(
+                [mols[i] for i in uniq], acts_by)
+            for i, acts, fps in zip(uniq, acts_by, fps_by):
+                packed = np.packbits(fps.astype(bool), axis=-1)
+                if cache is not None:
+                    cache.put(mols[i], acts, packed)
+                out[i] = (acts, fps, packed)
+            for i, rep in dup_of.items():
+                out[i] = out[rep]
+        # cache hits rebuild the dense rows from the packed bits (exact:
+        # the fingerprints are {0,1}-valued)
+        out = [(acts, unpack_fp(packed) if fps is None else fps, packed)
+               for acts, fps, packed in out]
+        t2 = time.perf_counter()
+        with self._stats_lock:
+            self.chem_enum_s += t1 - t0
+            self.chem_fp_s += t2 - t1
+        return out
+
     def _apply_enum(self, slots: Sequence[Slot],
-                    results: Sequence[tuple[list[Action], np.ndarray]]) -> None:
+                    results: Sequence[tuple[Sequence[Action], np.ndarray, np.ndarray]]
+                    ) -> None:
         """Install fresh candidate sets; complete pending transitions; kill
         slots with no legal action (their pending gets an empty successor
         set, which the double-DQN max values at zero)."""
-        for s, (acts, fps) in zip(slots, results, strict=True):
+        for s, (acts, fps, packed) in zip(slots, results, strict=True):
             s.candidates = acts
             s.cand_fps = fps
+            s.cand_fps_packed = packed
             if s.pending is not None:
-                # successor candidates are exactly this step's candidates
-                s.pending.next_fps = (
-                    np.stack([pack_fp(f) for f in fps]) if len(acts)
-                    else np.zeros((0, FP_BITS // 8), dtype=np.uint8))
+                # successor candidates are exactly this step's candidates;
+                # the packed rows are shared with the slot (replay copies)
+                s.pending.next_fps = packed
                 s.pending.next_steps_left_frac = (s.steps_left - 1) / self.cfg.max_steps
             if not acts:
                 s.steps_left = 0  # nothing to act on: the episode ends here
@@ -456,6 +549,26 @@ class RolloutEngine:
         while not self.done:
             all_recs.extend(step(policy, service, reward_cfg, buffers))
         return all_recs
+
+    # ------------------------------------------------------------ #
+    def chem_stats(self) -> dict:
+        """Host-chemistry accounting: enumeration / fingerprint seconds and
+        (incremental mode) the fleet-wide cache hit statistics."""
+        st = {
+            "mode": self.chem,
+            "enum_s": self.chem_enum_s,
+            "fp_s": self.chem_fp_s,
+            "env_steps": self.n_env_steps,
+        }
+        if self.chem_cache is not None:
+            st.update(self.chem_cache.stats())
+        return st
+
+    def reset_chem_stats(self) -> None:
+        self.chem_enum_s = 0.0
+        self.chem_fp_s = 0.0
+        if self.chem_cache is not None:
+            self.chem_cache.reset_stats()
 
     # ------------------------------------------------------------ #
     def final_molecules(self, worker: int | None = None) -> list[Molecule]:

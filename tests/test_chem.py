@@ -14,8 +14,10 @@ from repro.chem import (
     morgan_fingerprint, IncrementalMorgan, oracle_bde, oracle_ip,
     has_valid_conformer, sa_score, qed_score, penalized_logp, tanimoto,
 )
-from repro.chem.actions import enumerate_actions_naive
-from repro.chem.fingerprint import batch_morgan_fingerprints, morgan_fingerprint_reference
+from repro.chem.actions import enumerate_actions_naive, enumerate_actions_ref
+from repro.chem.fingerprint import (
+    batch_fingerprints_incremental, batch_morgan_fingerprints,
+    incremental_fingerprints_grouped, morgan_fingerprint_reference)
 from repro.chem.molecule import iso_hash, refine_invariants
 from repro.chem.smiles import canonical_smiles, from_smiles, to_smiles
 
@@ -107,6 +109,53 @@ def test_no_op_present(phenol):
     assert acts[0].result is phenol
 
 
+def _action_signature(a):
+    r = a.result
+    return (a.kind, a.detail, r.elements.tobytes(), r.bonds.tobytes())
+
+
+def test_delta_enumeration_matches_ref(phenol, bht):
+    """The delta enumerator must reproduce the reference action list EXACTLY
+    — same order, same details, same concrete (labelled) result arrays —
+    across every option combination, not just as a canonical-key set."""
+    import itertools
+    for mol in (phenol, bht, Molecule.empty(), from_smiles("O"),
+                from_smiles("OO"), from_smiles("CC(=O)O")):
+        for rem, noop, prot in itertools.product([True, False], repeat=3):
+            for max_atoms in (38, 8):
+                ref = enumerate_actions_ref(
+                    mol, allow_removal=rem, allow_no_op=noop,
+                    protect_oh=prot, max_atoms=max_atoms)
+                new = enumerate_actions(
+                    mol, allow_removal=rem, allow_no_op=noop,
+                    protect_oh=prot, max_atoms=max_atoms)
+                assert [_action_signature(a) for a in new] == \
+                       [_action_signature(a) for a in ref]
+
+
+def test_delta_enumeration_is_lazy(bht):
+    """Only fragment-dropping removals may materialise eagerly; every other
+    edit builds its Molecule on first ``result`` access (the engine only
+    ever materialises the CHOSEN action)."""
+    acts = enumerate_actions(bht)
+    lazy = [a for a in acts if not a.materialized]
+    assert len(lazy) > len(acts) // 2
+    a = lazy[0]
+    r1 = a.result                      # materialises now
+    assert a.materialized and a.result is r1
+
+
+def test_molecule_caches_are_read_only(bht):
+    fv = bht.free_valences()
+    assert bht.free_valences() is fv   # memoised
+    sp = bht.all_pairs_shortest_paths()
+    assert bht.all_pairs_shortest_paths() is sp
+    with pytest.raises(ValueError):
+        fv[0] = 99
+    with pytest.raises(ValueError):
+        sp[0, 0] = 99
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=15, deadline=None)
     @given(st.integers(0, 10**6))
@@ -120,8 +169,28 @@ if HAVE_HYPOTHESIS:
             mol.check_valences()
             assert mol.has_oh_bond()
             assert mol.num_atoms <= 15
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10**6),
+           st.sampled_from([PHENOL, BHT_ISH, "CC(=O)O", "OO"]))
+    def test_delta_enumeration_matches_ref_random_walks(seed, smiles):
+        """Random-walk property layer over the exact-pinning test: at every
+        visited molecule the delta enumerator equals the reference."""
+        rng = np.random.default_rng(seed)
+        mol = from_smiles(smiles)
+        for _ in range(4):
+            ref = enumerate_actions_ref(mol, max_atoms=16)
+            new = enumerate_actions(mol, max_atoms=16)
+            assert [_action_signature(a) for a in new] == \
+                   [_action_signature(a) for a in ref]
+            if not new:
+                break
+            mol = new[int(rng.integers(0, len(new)))].result
 else:
     def test_random_walk_preserves_invariants():
+        pytest.importorskip("hypothesis")
+
+    def test_delta_enumeration_matches_ref_random_walks():
         pytest.importorskip("hypothesis")
 
 
@@ -136,6 +205,64 @@ def test_incremental_equals_full(bht):
         inc2 = inc.after_action(a.result, a.kind, a.detail)
         assert np.array_equal(inc2.fingerprint(counts=True),
                               morgan_fingerprint(a.result, counts=True)), a
+
+
+def test_batched_incremental_equals_full(phenol, bht):
+    """The shared-parent batched pass == full recompute, bit for bit, for
+    every candidate (including no-ops and fragment-dropping removals), for
+    every routing threshold, binary and counts."""
+    for mol in (phenol, bht, from_smiles("OO"), from_smiles("OCC#N")):
+        acts = enumerate_actions(mol)
+        full = batch_morgan_fingerprints([a.result for a in acts])
+        for full_ratio in (0.0, 0.6, 1.1):   # all-full / mixed / all-incremental
+            inc = incremental_fingerprints_grouped(
+                [mol], [acts], full_ratio=full_ratio)[0]
+            assert np.array_equal(full, inc)
+        fullc = batch_morgan_fingerprints([a.result for a in acts], counts=True)
+        incc = batch_fingerprints_incremental(mol, acts, counts=True)
+        assert np.array_equal(fullc, incc)
+
+
+def test_batched_incremental_grouped_composition_independent(phenol, bht):
+    """Cross-slot batching and chunking must not change any bit (the
+    pipelined rollout shards slots across threads arbitrarily)."""
+    parents = [phenol, bht, from_smiles("CC(=O)O")]
+    groups = [enumerate_actions(p) for p in parents]
+    ref = [batch_fingerprints_incremental(p, g) for p, g in zip(parents, groups)]
+    for chunk in (7, 64, 0):
+        got = incremental_fingerprints_grouped(parents, groups, chunk=chunk)
+        for r, g in zip(ref, got):
+            assert np.array_equal(r, g)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10**6),
+           st.sampled_from([PHENOL, BHT_ISH, "OO", "OC1CC1"]))
+    def test_incremental_fingerprints_random_edit_sequences(seed, smiles):
+        """Across random edit sequences, pin BOTH §3.6 incremental paths to
+        the full recompute: ``IncrementalMorgan.after_action`` (single-edit
+        reference, threaded along the walk) and the batched shared-parent
+        pass (all candidates of every visited state).  Removals are included,
+        so fragment-dropping edits exercise the re-indexing fallbacks."""
+        rng = np.random.default_rng(seed)
+        mol = from_smiles(smiles)
+        inc = IncrementalMorgan(mol)
+        for _ in range(4):
+            acts = enumerate_actions(mol, max_atoms=16)
+            if not acts:
+                break
+            batched = batch_fingerprints_incremental(mol, acts)
+            full = batch_morgan_fingerprints([a.result for a in acts])
+            assert np.array_equal(batched, full)
+            a = acts[int(rng.integers(0, len(acts)))]
+            inc = inc.after_action(a.result, a.kind, a.detail)
+            mol = a.result
+            assert np.array_equal(inc.fingerprint(counts=True),
+                                  morgan_fingerprint(mol, counts=True))
+else:
+    def test_incremental_fingerprints_random_edit_sequences():
+        pytest.importorskip("hypothesis")
 
 
 def test_batch_equals_single(phenol, bht):

@@ -15,8 +15,8 @@ except ImportError:  # declared in pyproject [test]; degrade to a skip
 
 from repro.chem.smiles import from_smiles
 from repro.core import (
-    DQNAgent, DQNConfig, EnvConfig, ReplayBuffer, RewardConfig, RolloutEngine,
-    TrainerConfig,
+    CHEM_MODES, DQNAgent, DQNConfig, EnvConfig, ReplayBuffer, RewardConfig,
+    RolloutEngine, TrainerConfig,
 )
 from repro.core.agent import QNetwork, candidate_capacity, candidate_capacity_table
 from repro.core.distributed import ROLLOUT_MODES, DistributedTrainer
@@ -46,11 +46,11 @@ def _transitions(buf: ReplayBuffer):
 # ------------------------------------------------------------------ #
 # the equivalence matrix: every rollout mode == sequential reference
 # ------------------------------------------------------------------ #
-def _matrix_trainer(rollout: str, sync_mode: str, W: int, seed: int
-                    ) -> DistributedTrainer:
+def _matrix_trainer(rollout: str, sync_mode: str, W: int, seed: int,
+                    chem: str = "full") -> DistributedTrainer:
     cfg = TrainerConfig(
         n_workers=W, mols_per_worker=1, episodes=2, sync_mode=sync_mode,
-        rollout=rollout, updates_per_episode=1, train_batch_size=3,
+        rollout=rollout, chem=chem, updates_per_episode=1, train_batch_size=3,
         max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
         env=EnvConfig(max_steps=3), seed=seed)
     mols = (MOLS * ((W + len(MOLS) - 1) // len(MOLS)))[:W]
@@ -59,26 +59,30 @@ def _matrix_trainer(rollout: str, sync_mode: str, W: int, seed: int
 
 
 def _assert_matrix_equivalent(seed: int, W: int, sync_mode: str,
-                              episodes: int) -> None:
-    """All rollout modes must produce the identical transition stream (and,
-    when training updates run, identical synced parameters)."""
+                              episodes: int,
+                              chem_modes=CHEM_MODES) -> None:
+    """Every (rollout mode x chem mode) cell must produce the identical
+    transition stream (and, when training updates run, identical synced
+    parameters) as the sequential full-recompute reference."""
     streams, stats, params = {}, {}, {}
-    for mode in ROLLOUT_MODES:
-        tr = _matrix_trainer(mode, sync_mode, W, seed)
-        stats[mode] = [tr.train_episode() for _ in range(episodes)]
-        streams[mode] = [_transitions(b) for b in tr.buffers]
-        params[mode] = jax.tree_util.tree_leaves(tr.params)
-    ref = "per_worker"
-    for mode in ROLLOUT_MODES:
-        if mode == ref:
+    for chem in chem_modes:
+        for mode in ROLLOUT_MODES:
+            tr = _matrix_trainer(mode, sync_mode, W, seed, chem=chem)
+            cell = (mode, chem)
+            stats[cell] = [tr.train_episode() for _ in range(episodes)]
+            streams[cell] = [_transitions(b) for b in tr.buffers]
+            params[cell] = jax.tree_util.tree_leaves(tr.params)
+    ref = ("per_worker", chem_modes[0])
+    for cell in streams:
+        if cell == ref:
             continue
-        assert streams[mode] == streams[ref], \
-            f"{mode} transition stream diverged from {ref} (W={W}, {sync_mode})"
-        for sm, sr in zip(stats[mode], stats[ref]):
+        assert streams[cell] == streams[ref], \
+            f"{cell} transition stream diverged from {ref} (W={W}, {sync_mode})"
+        for sm, sr in zip(stats[cell], stats[ref]):
             assert sm["mean_final_reward"] == pytest.approx(
                 sr["mean_final_reward"], abs=1e-6, nan_ok=True)
             assert sm["loss"] == pytest.approx(sr["loss"], abs=1e-5, nan_ok=True)
-        for xm, xr in zip(params[mode], params[ref]):
+        for xm, xr in zip(params[cell], params[ref]):
             np.testing.assert_allclose(np.asarray(xm), np.asarray(xr), atol=1e-6)
 
 
@@ -292,6 +296,101 @@ def test_chunked_fingerprints_bit_identical():
     np.testing.assert_array_equal(
         batch_morgan_fingerprints(cands, counts=True, chunk=31),
         batch_morgan_fingerprints(cands, counts=True, chunk=0))
+
+
+# ------------------------------------------------------------------ #
+# incremental candidate chemistry: engine fps, fleet-wide chem cache
+# ------------------------------------------------------------------ #
+def _fresh_engine(chem, mols=None, max_steps=3):
+    return RolloutEngine([list(mols or MOLS[:2])], EnvConfig(max_steps=max_steps),
+                         chem=chem)
+
+
+def test_chem_incremental_candidate_fps_bit_identical():
+    """Stepping the full-recompute and incremental engines in lockstep, the
+    per-slot candidate fingerprints (dense AND packed rows) are bit-equal at
+    every step — the acceptance pin for the §3.6 incremental pass."""
+    engines, agents = {}, {}
+    for chem in CHEM_MODES:
+        engines[chem] = _fresh_engine(chem)
+        agents[chem] = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=5,
+                                network=QNetwork(hidden=(32,)))
+    svc = _OracleService()
+    while not engines["full"].done:
+        for chem in CHEM_MODES:
+            engines[chem].step(agents[chem], svc, RewardConfig())
+        for sf, si in zip(engines["full"].workers[0],
+                          engines["incremental"].workers[0]):
+            np.testing.assert_array_equal(sf.cand_fps, si.cand_fps)
+            np.testing.assert_array_equal(sf.cand_fps_packed, si.cand_fps_packed)
+            assert [a.detail for a in sf.candidates] == \
+                   [a.detail for a in si.candidates]
+
+
+def test_packed_candidate_rows_match_pack_fp():
+    """The one-packbits-per-batch satellite: every packed row equals the
+    seed's per-candidate pack_fp, and pending successors alias those rows."""
+    from repro.core.replay import pack_fp
+    engine = _fresh_engine("full")
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=2,
+                     network=QNetwork(hidden=(32,)))
+    engine.step(agent, _OracleService(), RewardConfig())
+    for s in engine.workers[0]:
+        assert s.cand_fps_packed.shape == (s.cand_fps.shape[0], 2048 // 8)
+        for r in range(s.cand_fps.shape[0]):
+            np.testing.assert_array_equal(s.cand_fps_packed[r],
+                                          pack_fp(s.cand_fps[r]))
+        if s.pending is not None and s.pending.next_fps is not None:
+            assert s.pending.next_fps is s.cand_fps_packed
+
+
+def test_chem_cache_shared_across_slots_and_episodes():
+    """Two slots starting from the SAME molecule chemistry-dedupe in batch;
+    restarting the episode serves step-1 enumerations from the cache."""
+    engine = RolloutEngine([[MOLS[0]], [MOLS[0]]], EnvConfig(max_steps=2),
+                           chem="incremental")
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=9,
+                     network=QNetwork(hidden=(32,)))
+    svc = _OracleService()
+    engine.run_episode(agent, svc, RewardConfig())
+    st = engine.chem_stats()
+    assert st["entries"] < st["hits"] + st["misses"]  # in-batch dedup worked
+    # second episode revisits the shared initial molecule: pure hits at reset
+    h0 = st["hits"]
+    engine.reset()
+    engine.step(agent, svc, RewardConfig())
+    assert engine.chem_stats()["hits"] >= h0 + 2
+
+
+def test_chem_cache_relabel_guard():
+    """Isomorphic but differently-labelled parents share a canonical key but
+    must NOT share cached candidates (enumeration order depends on the
+    labelling): the signature guard forces a recompute, counted separately."""
+    from repro.chem.fingerprint import batch_morgan_fingerprints
+    from repro.chem.molecule import Molecule
+    mol = MOLS[1]
+    perm = np.random.default_rng(3).permutation(mol.num_atoms)
+    twin = Molecule(mol.elements[perm], mol.bonds[np.ix_(perm, perm)])
+    assert twin.canonical_key() == mol.canonical_key()
+    engine = _fresh_engine("incremental")
+    engine._compute_enum([mol])
+    acts, fps, packed = engine._compute_enum([twin])[0]
+    st = engine.chem_stats()
+    assert st["misses"] == 1 and st["relabel_misses"] == 1 and st["hits"] == 0
+    np.testing.assert_array_equal(
+        fps, batch_morgan_fingerprints([a.result for a in acts]))
+
+
+def test_chem_stats_time_accounting():
+    engine = _fresh_engine("incremental")
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    engine.step(agent, _OracleService(), RewardConfig())
+    st = engine.chem_stats()
+    assert st["mode"] == "incremental"
+    assert st["enum_s"] > 0 and st["fp_s"] > 0 and st["env_steps"] == 1
+    engine.reset_chem_stats()
+    assert engine.chem_stats()["enum_s"] == 0.0
 
 
 # ------------------------------------------------------------------ #
