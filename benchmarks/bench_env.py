@@ -53,20 +53,9 @@ ENGINE_PLANS = ((64, 1, 3, 6), (256, 1, 2, 4), (512, 1, 2, 3))
 EPSILON = 0.1
 
 
-class _OracleSvc:
-    """Deterministic oracle-backed property stand-in (no jax, no training —
-    keeps the engine bench focused on host chemistry)."""
-
-    def __init__(self):
-        from repro.chem.conformer import has_valid_conformer
-        from repro.chem.oracle import oracle_bde, oracle_ip
-        from repro.predictors.service import Properties
-        self._p, self._bde, self._ip, self._ok = \
-            Properties, oracle_bde, oracle_ip, has_valid_conformer
-
-    def predict(self, mols):
-        return [self._p(bde=self._bde(m), ip=self._ip(m) if self._ok(m) else None)
-                for m in mols]
+# the shared deterministic property stand-in (no jax compute, no predictor
+# training — keeps the engine bench focused on host chemistry)
+from repro.predictors.service import OracleService as _OracleSvc
 
 
 class _LinearQPolicy:
@@ -199,9 +188,13 @@ def smoke(W: int = 16) -> None:
 
     max_steps, svc, rcfg = 4, _OracleSvc(), RewardConfig()
     mols = antioxidant_dataset(W)
-    engines = {chem: RolloutEngine([[m] for m in mols],
-                                   EnvConfig(max_steps=max_steps), chem=chem)
-               for chem in CHEM_MODES}
+    # the incremental engine additionally runs MESH-PADDED (two dead worker
+    # slots, as a W-not-divisible-by-nd fleet on a device mesh would be):
+    # padding must not perturb any live worker's candidate chemistry
+    engines = {chem: RolloutEngine(
+        [[m] for m in mols], EnvConfig(max_steps=max_steps), chem=chem,
+        pad_workers_to=W + 2 if chem == "incremental" else None)
+        for chem in CHEM_MODES}
     policies = {chem: _LinearQPolicy(W) for chem in CHEM_MODES}
 
     for episode in range(2):
@@ -218,6 +211,10 @@ def smoke(W: int = 16) -> None:
                         raise SystemExit(
                             f"FAIL: candidate fingerprints diverged "
                             f"(episode {episode}, worker {w}, slot {sf.index})")
+
+    padded = engines["incremental"]
+    if padded.n_workers != W + 2 or any(padded.workers[w] for w in (W, W + 1)):
+        raise SystemExit("FAIL: mesh-padding workers own slots (must be dead)")
 
     st = engines["incremental"].chem_stats()
     emit(f"env.smoke.w{W}.cache_hit_rate", round(st["hit_rate"], 3), "frac",

@@ -20,7 +20,10 @@ step), so only the PR-1 ``fleet`` engine and the new ``fleet_pipelined``
 ``python benchmarks/bench_rollout.py --smoke`` runs the CI gate: W=16,
 pipelined path, randomly-initialised predictors (no training needed), and
 FAILS if any XLA compile happens after warmup or the dispatch count is not
-exactly one per step.
+exactly one per step.  The gate is mesh-size-agnostic: CI also runs it
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (the
+multidevice-smoke job), which shards the fleet over nd=2 host devices and
+must hold the same zero-recompile bar.
 """
 
 from __future__ import annotations
@@ -186,6 +189,8 @@ def smoke(W: int = 16) -> None:
     m = _measure(tr, svc, counter, warmup=2, episodes=2)
     warmup_compiles = counter.count - mark0 - m["recompiles"]
 
+    emit(f"rollout.smoke.w{W}.devices", jax.device_count(), "devices",
+         "mesh size the fleet acted on (nd; force with XLA_FLAGS)")
     emit(f"rollout.smoke.w{W}.warmup_compiles", warmup_compiles, "compiles")
     emit(f"rollout.smoke.w{W}.recompiles_after_warmup", m["recompiles"],
          "compiles", "gate: must be 0")
@@ -201,8 +206,9 @@ def smoke(W: int = 16) -> None:
     if m["q_dispatches_per_step"] != 1.0:
         raise SystemExit(
             f"FAIL: {m['q_dispatches_per_step']} Q dispatches/step (expected 1)")
-    print(f"SMOKE PASS: W={W}, {warmup_compiles} warmup compiles, "
-          f"0 recompiles after warmup, 1 Q dispatch/step")
+    print(f"SMOKE PASS: W={W} on {jax.device_count()} device(s), "
+          f"{warmup_compiles} warmup compiles, 0 recompiles after warmup, "
+          f"1 Q dispatch/step")
 
 
 if __name__ == "__main__":

@@ -37,7 +37,10 @@ Honest perf notes (2-core CPU container):
 
 ``python benchmarks/bench_train.py --smoke`` runs the CI gate: W=8, fails
 on any XLA compile after warmup, an H2D reduction below 30x, or a
-host-sample speedup below 3x.
+host-sample speedup below 3x.  Like the rollout gate it is mesh-size-
+agnostic: the multidevice-smoke CI job re-runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` so the packed
+``shard_map`` train step holds the zero-recompile bar at nd=2 too.
 """
 
 from __future__ import annotations
@@ -210,8 +213,12 @@ def run(scale: str = "quick") -> None:
 # CI smoke gate: train-step shape discipline + structural reductions
 # ------------------------------------------------------------------ #
 def smoke(W: int = 8) -> None:
+    import jax
+
     B, C, n = 8, 16, 6
     counter = RecompileCounter.install()
+    emit(f"train.smoke.w{W}.devices", jax.device_count(), "devices",
+         "mesh size the update step sharded over (nd; force with XLA_FLAGS)")
 
     host = _measure_host_sampling(W, B, C, reps=5)
     host_speedup = host["seed_list"] / host["soa_packed"]
@@ -239,7 +246,8 @@ def smoke(W: int = 8) -> None:
     if host_speedup < 3:
         raise SystemExit(
             f"FAIL: host-sample speedup {host_speedup:.1f}x < 3x vs seed list buffer")
-    print(f"SMOKE PASS: W={W}, 0 recompiles after warmup, 1 train-step shape, "
+    print(f"SMOKE PASS: W={W} on {jax.device_count()} device(s), "
+          f"0 recompiles after warmup, 1 train-step shape, "
           f"{ratio:.1f}x H2D reduction, {host_speedup:.1f}x host-sample speedup")
 
 

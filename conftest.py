@@ -2,21 +2,8 @@ import warnings
 
 warnings.filterwarnings("ignore", category=DeprecationWarning)
 
-
-class OracleService:
-    """Deterministic stand-in for PropertyService (oracle-backed); counts
-    ``predict`` entries so dispatch-per-step tests can assert batching.
-    Shared by the test modules (``from conftest import OracleService``)."""
-
-    def __init__(self):
-        from repro.chem.conformer import has_valid_conformer
-        from repro.chem.oracle import oracle_bde, oracle_ip
-        from repro.predictors.service import Properties
-        self._p, self._bde, self._ip, self._ok = \
-            Properties, oracle_bde, oracle_ip, has_valid_conformer
-        self.n_calls = 0
-
-    def predict(self, mols):
-        self.n_calls += 1
-        return [self._p(bde=self._bde(m), ip=self._ip(m) if self._ok(m) else None)
-                for m in mols]
+# THE deterministic PropertyService stand-in, re-exported for the test
+# modules (``from conftest import OracleService``).  One implementation in
+# src — the multi-device truth run's bit-equality pins depend on every
+# harness predicting identically.
+from repro.predictors.service import OracleService  # noqa: E402,F401

@@ -75,7 +75,8 @@ class ChemCache:
         self.relabel_misses = 0      # canonical hit, different atom labelling
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     # ------------------------------------------------------------ #
     def get(self, mol: Molecule) -> ChemEntry | None:
@@ -113,19 +114,25 @@ class ChemCache:
     # ------------------------------------------------------------ #
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses + self.relabel_misses
-        return self.hits / total if total else 0.0
+        return self.stats()["hit_rate"]
 
     def stats(self) -> dict:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "relabel_misses": self.relabel_misses,
-            "hit_rate": self.hit_rate,
-            "entries": len(self._data),
-        }
+        # one consistent snapshot: the pipelined rollout reads stats while
+        # its enumeration threads are still inserting, and an unlocked read
+        # can tear (hits already bumped, misses not yet) — every counter
+        # access goes through the same lock as get/put
+        with self._lock:
+            total = self.hits + self.misses + self.relabel_misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "relabel_misses": self.relabel_misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "entries": len(self._data),
+            }
 
     def reset_stats(self) -> None:
-        self.hits = 0
-        self.misses = 0
-        self.relabel_misses = 0
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
+            self.relabel_misses = 0

@@ -9,13 +9,18 @@ JAX mapping (DESIGN.md §5): workers are a stacked leading axis sharded over
 the mesh's "data" axis via ``shard_map``; the two synchronisation regimes
 become two collective placements:
 
-* ``sync_mode="step"``   — MT-MolDQN/DDP: gradients are ``pmean``-ed across
+* ``sync_mode="step"``   — MT-MolDQN/DDP: gradients are mean-reduced across
   workers at EVERY optimiser step (params stay replicated across workers).
 * ``sync_mode="episode"`` — DA-MolDQN: every worker updates its OWN params
   locally (no per-step collective); parameters (and optimizer moments) are
-  ``pmean``-ed once per episode boundary.
+  mean-reduced once per episode boundary.
 
-Both lower to all-reduce; the roofline benchmark quantifies the traffic:
+Both cross-worker means are implemented as all_gather + an identical
+full-worker-axis reduction on every device (``fleet_mean``) rather than
+``pmean`` of per-shard means: the reduction order is then independent of
+the mesh size, which is what lets tests/multidevice pin nd > 1 runs
+BIT-identical to the nd = 1 reference (and lets dead mesh-padding workers
+be masked out exactly).  The roofline benchmark quantifies the traffic:
 episode-sync moves (param_bytes) once per episode instead of (grad_bytes x
 updates_per_episode) — the paper's communication-efficiency claim in
 collective-bytes form.
@@ -85,7 +90,7 @@ from repro.core.packed_batch import densify_batch, packed_nbytes
 from repro.core.replay import ReplayBuffer
 from repro.core.rollout import CHEM_MODES, STATE_DIM, RolloutEngine
 from repro.core.reward import RewardConfig
-from repro.launch.mesh import fleet_sharding
+from repro.launch.mesh import fleet_sharding, make_host_mesh, padded_worker_count
 from repro.optim import adam
 from repro.optim.adam import apply_updates
 from repro.predictors.service import PropertyService
@@ -180,8 +185,10 @@ class _FleetView:
         cap = candidate_capacity(max_candidates, self._table)
         if cap > self._cap:
             self._cap = cap
+            # rows for the PADDED fleet: dead mesh-padding workers keep
+            # all-zero rows, so the [W_pad, C, D] batch tiles the mesh
             self._dense = np.zeros(
-                (self.t.cfg.n_workers, cap, STATE_DIM), np.float32)
+                (self.t.n_padded_workers, cap, STATE_DIM), np.float32)
 
     def fleet_q_values(self, per_worker: list[np.ndarray]) -> list[np.ndarray]:
         counts = [x.shape[0] for x in per_worker]
@@ -205,7 +212,20 @@ class _FleetView:
 
 
 class DistributedTrainer:
-    """Trains ONE general model over many molecules with W workers."""
+    """Trains ONE general model over many molecules with W workers.
+
+    Runs on any single-axis "data" mesh (``launch.mesh.make_host_mesh`` by
+    default).  A worker count that does not divide the device count is
+    padded to the mesh with dead worker slots: ``n_live_workers`` is the
+    configured fleet, ``n_padded_workers`` the stacked/sharded width.  Dead
+    slots own no molecules (zero rows in every dense acting batch), ship
+    all-zero update batches whose masked gradients are exact no-ops, and
+    are excluded from every cross-worker mean — so the live results are
+    identical to the unpadded run.  The multi-device equivalence suite
+    (tests/multidevice, driven by ``repro.launch.verify`` subprocesses)
+    pins transitions, loss trajectories and parameters bit-identical
+    across nd in {1, 2, 4} forced host devices.
+    """
 
     def __init__(
         self,
@@ -227,11 +247,17 @@ class DistributedTrainer:
         self.molecules = molecules[:need]
 
         if mesh is None:
-            mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            mesh = make_host_mesh()   # the one mesh-construction code path
         self.mesh = mesh
         nd = mesh.devices.size
-        if W % nd != 0:
-            raise ValueError(f"n_workers={W} must be divisible by mesh size {nd}")
+        # fleets that do not divide the mesh pad to it with DEAD worker
+        # slots: a W=6 fleet on a 4-device mesh trains as a padded W=8
+        # fleet whose two dead slots own no molecules, zero out of every
+        # dense row, and are masked out of every cross-worker mean — the
+        # live workers' transitions, losses and parameters are identical
+        # to the unpadded run (tests/multidevice pins this at nd in {2,4})
+        self.n_live_workers = W
+        self.n_padded_workers = padded_worker_count(W, mesh)
 
         if cfg.rollout not in ROLLOUT_MODES:
             raise ValueError(f"rollout must be one of {ROLLOUT_MODES}, got {cfg.rollout!r}")
@@ -257,7 +283,8 @@ class DistributedTrainer:
             [self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker]
              for w in range(W)],
             cfg.env, pipeline_threads=cfg.pipeline_threads,
-            chem=cfg.chem, chem_cache=self.chem_cache)
+            chem=cfg.chem, chem_cache=self.chem_cache,
+            pad_workers_to=self.n_padded_workers)
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         # storage truncates where sample() would anyway (cfg.max_candidates),
         # so the SoA candidate axis never outgrows what training can see
@@ -270,11 +297,15 @@ class DistributedTrainer:
         self.h2d_update_bytes = 0  # host->device bytes shipped by update batches
         self._sampler_pool: ThreadPoolExecutor | None = None  # packed_pipelined
 
-        # stacked per-worker params [W, ...] sharded over "data"
+        # stacked per-worker params [W_pad, ...] sharded over "data"
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed), W)
         params = jax.vmap(self.network.init)(keys)
-        # all workers start from the same weights (like DDP broadcast)
-        params = jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x[0], x.shape), params)
+        # all workers start from the same weights (like DDP broadcast);
+        # padding rows replicate worker 0's weights too, so the initial
+        # stacked tree is independent of how far the mesh padded the fleet
+        params = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x[0], (self.n_padded_workers,) + x.shape[1:]), params)
         self.opt = adam(cfg.dqn.lr, clip_norm=cfg.dqn.grad_clip)
         opt_state = jax.vmap(self.opt.init)(params)
 
@@ -329,32 +360,77 @@ class DistributedTrainer:
             return jnp.mean(huber(q_sa - y))
 
         spec_w = P("data")
+        n_live = self.n_live_workers
+        W_pad = self.n_padded_workers
+        W_local = W_pad // mesh.devices.size  # workers resident per device
+
+        def fleet_mean(x, keepdims: bool = False):
+            """Mean over the LIVE workers of a ``[W_local, ...]`` shard.
+
+            The reduction order must not depend on the mesh size (mean-of-
+            in-shard-means drifts in the last bit between nd=1 and nd>1),
+            so every device gathers the FULL worker axis and runs the
+            identical ``[W_pad, ...]`` reduction locally.  Dead padding
+            rows are zeroed before the sum; summing trailing exact zeros
+            is a bitwise no-op, which keeps a padded W=6-on-4-devices run
+            identical to the unpadded nd=1 W=6 reference.
+            """
+            full = jax.lax.all_gather(x, "data", axis=0, tiled=True)
+            if n_live != W_pad:
+                m = (jnp.arange(W_pad) < n_live).astype(x.dtype)
+                full = full * m.reshape((-1,) + (1,) * (full.ndim - 1))
+            return jnp.sum(full, axis=0, keepdims=keepdims) / n_live
+
+        def shard_live_mask():
+            """f32 ``[W_local]``: 1 for live workers resident in this
+            shard, 0 for dead mesh-padding workers."""
+            rows = jax.lax.axis_index("data") * W_local + jnp.arange(W_local)
+            return (rows < n_live).astype(jnp.float32)
+
+        def scan_workers(f, xs):
+            """Map ``f`` over the shard's resident workers via ``lax.scan``
+            instead of ``vmap``: the per-iteration program is independent of
+            W_local, which is what makes the update bit-identical across
+            mesh sizes.  (A vmap'd per-worker matmul lowers as a BATCHED
+            dot, and XLA lowers batch 1 — one worker per device, nd == W —
+            differently from batch n, drifting the gradients' last bits
+            between nd = 1 and nd = W; pinned by tests/multidevice.)"""
+            def step(carry, x):
+                return carry, f(*x)
+            return jax.lax.scan(step, None, xs)[1]
 
         def local_update_body(params, target, opt_state, batch):
-            # vmap over the workers resident in this shard; NO collective
-            def one(p, tp, s, b):
+            # per resident worker, serially within the shard; NO collective
+            mask = shard_live_mask()
+
+            def one(p, tp, s, b, m):
                 loss, grads = jax.value_and_grad(per_worker_loss)(p, tp, b)
+                if n_live != W_pad:
+                    # dead padding slots must not move: zero their grads
+                    # (Adam with zero grads and zero moments is an exact
+                    # no-op on the params)
+                    grads = jax.tree_util.tree_map(lambda g: g * m, grads)
                 updates, s2 = opt.update(grads, s, p)
                 return apply_updates(p, updates), s2, loss
-            return jax.vmap(one)(params, target, opt_state, batch)
+            return scan_workers(one, (params, target, opt_state, batch, mask))
 
         def ddp_update_body(params, target, opt_state, batch):
-            # grads pmean'd across ALL workers (in-shard mean + axis pmean)
+            # grads averaged across all LIVE workers (nd-invariant masked
+            # mean); every worker — dead padding included — applies the
+            # same mean update, so the stacked tree stays replicated
             def gfn(p, tp, b):
                 return jax.value_and_grad(per_worker_loss)(p, tp, b)
-            losses, grads = jax.vmap(gfn)(params, target, batch)
-            gmean = jax.tree_util.tree_map(
-                lambda g: jax.lax.pmean(jnp.mean(g, axis=0), "data"), grads)
+            losses, grads = scan_workers(gfn, (params, target, batch))
+            gmean = jax.tree_util.tree_map(fleet_mean, grads)
             def one(p, s):
                 updates, s2 = opt.update(gmean, s, p)
                 return apply_updates(p, updates), s2
-            new_p, new_s = jax.vmap(one, in_axes=(0, 0))(params, opt_state)
+            new_p, new_s = scan_workers(one, (params, opt_state))
             return new_p, new_s, losses
 
         def sync_body(tree):
             return jax.tree_util.tree_map(
-                lambda x: jnp.broadcast_to(
-                    jax.lax.pmean(jnp.mean(x, axis=0, keepdims=True), "data"), x.shape),
+                lambda x: jnp.broadcast_to(fleet_mean(x, keepdims=True), x.shape),
                 tree)
 
         # packed twins: identical update bodies, but the batch arrives as
@@ -412,11 +488,14 @@ class DistributedTrainer:
 
         # the same dispatch sharded over "data": each device evaluates its
         # resident [W/nd, C, D] slice under its resident [W/nd, ...] params;
-        # acting is embarrassingly data-parallel, so there is no collective
+        # acting is embarrassingly data-parallel, so there is no collective.
+        # out_shardings is pinned like the update fns: at nd > 1 the
+        # compiler may otherwise mark the output replicated, and the flip
+        # retraces the dispatch (the recompile counter gates this)
         self._fleet_q_sharded = jax.jit(shard_map(
             net.apply_stacked, mesh=mesh,
             in_specs=(spec_w, spec_w), out_specs=spec_w,
-        ))
+        ), out_shardings=out_w)
 
     # ------------------------------------------------------------ #
     # training
@@ -509,7 +588,7 @@ class DistributedTrainer:
         view.reserve(max_candidates)
         if view._cap != before:
             dummy = [np.zeros((1, STATE_DIM), np.float32)
-                     for _ in range(self.cfg.n_workers)]
+                     for _ in range(self.engine.n_workers)]
             view.fleet_q_values(dummy)
 
     def _select_action(self, q: np.ndarray, w: int) -> int:
@@ -528,22 +607,32 @@ class DistributedTrainer:
     # ------------------------------------------------------------ #
     # learner: replay sampling + update dispatch (LEARNER_MODES)
     # ------------------------------------------------------------ #
+    def _pad_stacked(self, per: list[dict[str, np.ndarray]]
+                     ) -> dict[str, np.ndarray]:
+        """Stack per-live-worker sample dicts to ``[W_pad, B, ...]``: dead
+        mesh-padding workers ship all-zero batches (their masked updates
+        are exact no-ops, and their loss rows are sliced off on the host)."""
+        if self.n_padded_workers != self.n_live_workers:
+            zero = {k: np.zeros_like(v) for k, v in per[0].items()}
+            per = per + [zero] * (self.n_padded_workers - self.n_live_workers)
+        return {k: np.stack([p[k] for p in per]) for k in per[0]}
+
     def _stacked_sample_np(self) -> dict[str, np.ndarray]:
         """Seed path host work: one DENSE float32 sample per worker buffer,
-        stacked to ``[W, B, ...]`` (what `_stacked_sample` ships)."""
-        per = [b.sample(self.cfg.train_batch_size, self.cfg.max_candidates)
-               for b in self.buffers]
-        return {k: np.stack([p[k] for p in per]) for k in per[0]}
+        stacked to ``[W_pad, B, ...]`` (what `_stacked_sample` ships)."""
+        return self._pad_stacked(
+            [b.sample(self.cfg.train_batch_size, self.cfg.max_candidates)
+             for b in self.buffers])
 
     def _stacked_sample_packed_np(self) -> dict[str, np.ndarray]:
         """Packed path host work: uint8 bit planes + scalars, stacked to
-        ``[W, B, ...]`` — ~32x fewer bytes than ``_stacked_sample_np`` and
-        no host-side unpack at all.  Draws the SAME per-buffer seeded
+        ``[W_pad, B, ...]`` — ~32x fewer bytes than ``_stacked_sample_np``
+        and no host-side unpack at all.  Draws the SAME per-buffer seeded
         indices as the dense sampler, which is what makes the two learner
         paths loss-trajectory-identical (tests/test_learner.py)."""
-        per = [b.sample_packed(self.cfg.train_batch_size, self.cfg.max_candidates)
-               for b in self.buffers]
-        return {k: np.stack([p[k] for p in per]) for k in per[0]}
+        return self._pad_stacked(
+            [b.sample_packed(self.cfg.train_batch_size, self.cfg.max_candidates)
+             for b in self.buffers])
 
     def _ship(self, host_batch: dict[str, np.ndarray]) -> dict[str, jnp.ndarray]:
         self.h2d_update_bytes += packed_nbytes(host_batch)
@@ -567,6 +656,13 @@ class DistributedTrainer:
         self.n_updates += 1
         return loss
 
+    def _loss_scalar(self, loss) -> float:
+        """Scalar loss over the LIVE workers of a ``[W_pad]`` loss vector
+        (dead mesh-padding rows carry zero-batch garbage).  Computed the
+        same way at every mesh size so loss trajectories are comparable
+        bit for bit across nd."""
+        return float(np.asarray(loss)[: self.n_live_workers].mean())
+
     def _get_sampler(self) -> ThreadPoolExecutor:
         if self._sampler_pool is None:
             self._sampler_pool = ThreadPoolExecutor(
@@ -585,12 +681,12 @@ class DistributedTrainer:
             # must not advance the buffers' sample RNG streams
         mode = self.cfg.learner
         if mode == "dense":
-            return [float(jnp.mean(self._update_once(self._stacked_sample(),
-                                                     packed=False)))
+            return [self._loss_scalar(self._update_once(self._stacked_sample(),
+                                                        packed=False))
                     for _ in range(n)]
         if mode == "packed":
-            return [float(jnp.mean(self._update_once(self._stacked_sample_packed(),
-                                                     packed=True)))
+            return [self._loss_scalar(self._update_once(self._stacked_sample_packed(),
+                                                        packed=True))
                     for _ in range(n)]
         pool = self._get_sampler()
         fut = pool.submit(self._stacked_sample_packed_np)
@@ -600,10 +696,10 @@ class DistributedTrainer:
             if k + 1 < n:
                 fut = pool.submit(self._stacked_sample_packed_np)
             # the update dispatch is async: XLA computes while the sampler
-            # thread gathers; only the final float() conversions block
+            # thread gathers; only the final host conversions block
             device_losses.append(
                 self._update_once(self._ship(host_batch), packed=True))
-        return [float(jnp.mean(l)) for l in device_losses]
+        return [self._loss_scalar(l) for l in device_losses]
 
     def train(self, episodes: int | None = None, log_every: int = 0) -> list[dict]:
         stats = []

@@ -60,6 +60,43 @@ class RecompileCounter:
     def delta_since(self, mark: int) -> int:
         return self.count - mark
 
+    def window(self) -> "CompileWindow":
+        """Context manager over a measured region::
+
+            with counter.window() as w:
+                ...measured work...
+            assert w.count == 0      # no XLA compiles inside the block
+
+        ``w.count`` is live inside the block and frozen at exit — the idiom
+        the multi-device verification runner and the benchmark smoke gates
+        share for their recompiles-after-warmup gates.
+        """
+        return CompileWindow(self)
+
+
+class CompileWindow:
+    """Compile count within a ``with`` region (see ``RecompileCounter.window``)."""
+
+    def __init__(self, counter: RecompileCounter) -> None:
+        self._counter = counter
+        self._mark = counter.count
+        self._final: int | None = None
+
+    @property
+    def count(self) -> int:
+        if self._final is not None:
+            return self._final
+        return self._counter.count - self._mark
+
+    def __enter__(self) -> "CompileWindow":
+        self._mark = self._counter.count
+        self._final = None
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._final = self._counter.count - self._mark
+        return False
+
 
 def jit_cache_size(fn) -> int:
     """Tracing-cache entry count of a ``jax.jit``-wrapped function."""

@@ -172,7 +172,8 @@ class RolloutEngine:
 
     def __init__(self, worker_molecules: Sequence[Sequence[Molecule]],
                  cfg: EnvConfig | None = None, pipeline_threads: int | None = None,
-                 chem: str = "full", chem_cache: ChemCache | None = None):
+                 chem: str = "full", chem_cache: ChemCache | None = None,
+                 pad_workers_to: int | None = None):
         if chem not in CHEM_MODES:
             raise ValueError(f"chem must be one of {CHEM_MODES}, got {chem!r}")
         self.cfg = cfg if cfg is not None else EnvConfig()
@@ -182,6 +183,18 @@ class RolloutEngine:
         self.chem_cache = chem_cache if chem_cache is not None else \
             (ChemCache() if chem == "incremental" else None)
         self.worker_initials = [list(ms) for ms in worker_molecules]
+        self.n_live_workers = len(self.worker_initials)
+        # mesh padding: DEAD workers own no molecules, contribute zero-row
+        # state matrices to every dense batch, and never touch a buffer —
+        # how a fleet that does not divide the device count tiles the mesh
+        # without changing any live worker's transitions (PR-2's ragged
+        # zero-slot semantics, promoted to whole workers)
+        if pad_workers_to is not None:
+            if pad_workers_to < self.n_live_workers:
+                raise ValueError(
+                    f"pad_workers_to={pad_workers_to} < {self.n_live_workers} live workers")
+            self.worker_initials += [
+                [] for _ in range(pad_workers_to - self.n_live_workers)]
         self.n_workers = len(self.worker_initials)
         self.workers: list[list[Slot]] = []
         self.n_env_steps = 0
@@ -215,6 +228,20 @@ class RolloutEngine:
 
     def _live(self, w: int) -> list[Slot]:
         return [s for s in self.workers[w] if s.steps_left > 0]
+
+    def _pad_buffers(self, buffers: Sequence[ReplayBuffer | None] | None
+                     ) -> Sequence[ReplayBuffer | None] | None:
+        """Accept per-LIVE-worker buffer lists on a mesh-padded engine: the
+        padding workers own no slots, so they can never write a transition —
+        extend the list with ``None`` instead of making every caller care
+        about the padded width."""
+        if buffers is None or len(buffers) == self.n_workers:
+            return buffers
+        if len(buffers) != self.n_live_workers:
+            raise ValueError(
+                f"expected {self.n_live_workers} (live) or {self.n_workers} "
+                f"(padded) buffers, got {len(buffers)}")
+        return list(buffers) + [None] * (self.n_workers - self.n_live_workers)
 
     def _get_pool(self) -> ThreadPoolExecutor:
         if self._pool is None:
@@ -474,6 +501,7 @@ class RolloutEngine:
         sequential, no overlap.  ``step_pipelined`` must stay
         transition-identical to it (tests/test_rollout.py)."""
         policy = as_fleet_policy(policy)
+        buffers = self._pad_buffers(buffers)
         live_by_worker = self._begin_step(buffers)
         if live_by_worker is None:
             return []
@@ -505,6 +533,7 @@ class RolloutEngine:
         on the selected actions, not on each other, so the transition
         stream is identical to the reference."""
         policy = as_fleet_policy(policy)
+        buffers = self._pad_buffers(buffers)
         live_by_worker = self._begin_step(buffers)
         if live_by_worker is None:
             return []

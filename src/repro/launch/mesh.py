@@ -8,6 +8,7 @@ device query, and smoke tests must keep seeing 1 CPU device.
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -19,9 +20,42 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh() -> Mesh:
-    """All locally-visible devices on a single "data" axis (RL trainer)."""
-    return jax.make_mesh((jax.device_count(),), ("data",))
+def make_host_mesh(nd: int | None = None) -> Mesh:
+    """The first ``nd`` locally-visible devices (default: all of them) on a
+    single "data" axis (RL trainer).
+
+    The ONE mesh-construction code path for single-axis data-parallel
+    training: ``DistributedTrainer`` defaults to this, and the multi-device
+    verification suite (``repro.launch.verify``) sizes it with ``nd``.
+
+    ``nd`` selects a SUBMESH over the first nd visible devices.  The
+    verification suite relies on this: XLA-CPU's kernel/threading choices
+    depend on the *client's* device count (a plain single-device matmul
+    changes its last bits between a 1-device and a 4-device client), so
+    cross-nd bit-equality is only meaningful when every scenario runs in an
+    identically-configured client — fixed forced device pool, varying
+    submesh — rather than one client per device count.
+    """
+    if nd is None:
+        return jax.make_mesh((jax.device_count(),), ("data",))
+    devices = jax.devices()
+    if nd <= 0 or nd > len(devices):
+        raise ValueError(f"nd={nd} outside [1, {len(devices)}] visible devices")
+    return Mesh(np.asarray(devices[:nd]), ("data",))
+
+
+def padded_worker_count(n_workers: int, mesh: Mesh) -> int:
+    """Smallest worker count >= ``n_workers`` that tiles the mesh evenly.
+
+    A fleet whose worker count does not divide the device count is padded
+    to this size with DEAD worker slots (no molecules, zero dense rows,
+    masked out of every cross-worker mean) instead of erroring — see
+    ``DistributedTrainer``.
+    """
+    if n_workers <= 0:
+        raise ValueError(f"n_workers must be positive, got {n_workers}")
+    nd = mesh.devices.size
+    return -(-n_workers // nd) * nd
 
 
 def fleet_sharding(mesh: Mesh) -> NamedSharding:

@@ -1,0 +1,205 @@
+"""Multi-device truth run: one (rollout x learner x chem x sync) cell of the
+equivalence matrix, executed on an nd-device submesh of a forced host pool.
+
+The sharded trainer paths (``fleet_sharded`` acting, the packed ``shard_map``
+learner, the DDP/episode mean syncs) are only *believed* correct until
+they run on a mesh with nd > 1 — ``--xla_force_host_platform_device_count``
+makes any CPU host into that mesh, but the flag must be set in ``XLA_FLAGS``
+**before jax initialises** (the ``launch/dryrun.py`` idiom), hence this
+subprocess runner: each invocation is one fresh process, one scenario, one
+``.npz`` report.
+
+    PYTHONPATH=src python -m repro.launch.verify --nd 2 --out /tmp/nd2.npz \
+        --rollout fleet_sharded --learner packed --chem incremental
+
+Every invocation forces the SAME device pool (``--device-pool``, default 8)
+and sizes the trainer's mesh as a SUBMESH over the first ``--nd`` devices.
+This is load-bearing for bit-equality: XLA-CPU picks matmul kernels and
+thread partitions per *client* device count (a plain one-device f32 GEMM
+changes its last bits between a 1-device and a 4-device client), so the
+nd=1 reference and the nd=4 run must share one client configuration for
+their difference to be *the sharding*, not the backend.
+
+The report carries everything the equivalence matrix pins across nd:
+
+* a per-worker digest of the full replay transition stream,
+* the loss and mean-final-reward trajectories,
+* every live worker's parameter leaves (exact bits),
+* compile accounting (``jit_stats``): compiles during warmup vs compiles
+  during the measured episodes (the recompiles-after-warmup gate is 0).
+
+tests/multidevice compares these reports at nd in {1, 2, 4} (plus the
+ragged W-not-divisible-by-nd fleets that pad to the mesh with dead slots);
+identical bits across nd is the acceptance criterion, not a tolerance.
+"""
+
+import os
+import sys
+
+
+DEFAULT_DEVICE_POOL = 8
+
+
+def _flag_from_argv(name: str, default: int) -> int:
+    for i, a in enumerate(sys.argv):
+        if a == name and i + 1 < len(sys.argv):
+            return int(sys.argv[i + 1])
+        if a.startswith(name + "="):
+            return int(a.split("=", 1)[1])
+    return default
+
+
+if __name__ == "__main__":
+    # MUST precede every jax-importing module (jax locks the device count
+    # on first init); deliberately OVERWRITES any inherited XLA_FLAGS so a
+    # parent process pinned to a different device count cannot leak it into
+    # this scenario.  Gated on script execution so merely importing this
+    # module (e.g. the CI import smoke-check) has no environment side
+    # effects — the dryrun.py idiom, minus the import-time mutation.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        f"{_flag_from_argv('--device-pool', DEFAULT_DEVICE_POOL)}")
+
+import argparse
+import hashlib
+import json
+
+
+MOLS_SMILES = ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O",
+               "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")
+
+
+def _transition_digest(buf) -> str:
+    """SHA-256 over the buffer's full transition stream, every field that
+    the in-process equivalence matrix compares (tests/test_rollout.py)."""
+    import numpy as np
+
+    h = hashlib.sha256()
+    for t in buf._items:
+        h.update(t.state_fp.tobytes())
+        h.update(np.float64(t.steps_left_frac).tobytes())
+        h.update(np.float64(t.reward).tobytes())
+        h.update(b"\x01" if t.done else b"\x00")
+        h.update(t.next_fps.tobytes())
+        h.update(np.float64(t.next_steps_left_frac).tobytes())
+    return h.hexdigest()
+
+
+def run_scenario(args) -> dict:
+    """Build the trainer on the forced mesh, train warmup + measured
+    episodes, and return the report arrays (see module docstring)."""
+    import jax
+    import numpy as np
+
+    from repro.chem.smiles import from_smiles
+    from repro.core.agent import DQNConfig, QNetwork
+    from repro.core.distributed import DistributedTrainer, TrainerConfig
+    from repro.core.jit_stats import RecompileCounter
+    from repro.core.rollout import EnvConfig
+    from repro.core.reward import RewardConfig
+    from repro.launch.mesh import make_host_mesh
+    # the SHARED deterministic property stub (same class the tier-1 test
+    # matrices and chem benches use): jit-free, so the trainer's own jits
+    # are the only compiles, and identical answers in every process
+    from repro.predictors.service import OracleService
+
+    if jax.device_count() != args.device_pool:
+        raise SystemExit(
+            f"FAIL: expected a {args.device_pool}-device forced host pool, "
+            f"jax sees {jax.device_count()} — XLA_FLAGS was read after jax init?")
+    if args.nd > args.device_pool:
+        raise SystemExit(f"FAIL: --nd {args.nd} > --device-pool {args.device_pool}")
+    mesh = make_host_mesh(args.nd)
+
+    counter = RecompileCounter.install()
+    cfg = TrainerConfig(
+        n_workers=args.workers, mols_per_worker=args.mols_per_worker,
+        episodes=args.warmup + args.episodes, sync_mode=args.sync,
+        rollout=args.rollout, learner=args.learner, chem=args.chem,
+        updates_per_episode=args.updates_per_episode,
+        train_batch_size=args.batch_size, max_candidates=args.max_candidates,
+        dqn=DQNConfig(epsilon_decay=args.epsilon_decay),
+        env=EnvConfig(max_steps=args.max_steps), seed=args.seed)
+    need = args.workers * args.mols_per_worker
+    mols = [from_smiles(MOLS_SMILES[i % len(MOLS_SMILES)]) for i in range(need)]
+    hidden = tuple(int(h) for h in args.hidden.split(","))
+    tr = DistributedTrainer(cfg, mols, OracleService(), RewardConfig(),
+                            mesh=mesh, network=QNetwork(hidden=hidden))
+    assert tr.mesh.devices.size == args.nd
+    assert tr.engine.n_workers == tr.n_padded_workers
+    assert tr.n_padded_workers % args.nd == 0
+
+    with counter.window() as warm:
+        stats = [tr.train_episode() for _ in range(args.warmup)]
+        # one ladder rung of candidate headroom past the warmup high-water
+        # mark, so drift in the measured episodes cannot grow the jit shape
+        if tr.candidate_capacity:
+            tr.reserve_candidates(int(tr.candidate_capacity * 1.3))
+    with counter.window() as measured:
+        stats += [tr.train_episode() for _ in range(args.episodes)]
+
+    out = {
+        "n_devices": np.int64(tr.mesh.devices.size),
+        "device_pool": np.int64(jax.device_count()),
+        "n_live_workers": np.int64(tr.n_live_workers),
+        "n_padded_workers": np.int64(tr.n_padded_workers),
+        "losses": np.asarray([s["loss"] for s in stats], np.float64),
+        "rewards": np.asarray([s["mean_final_reward"] for s in stats], np.float64),
+        "warmup_compiles": np.int64(warm.count),
+        "recompiles_after_warmup": np.int64(measured.count),
+        "transition_digests": np.asarray(
+            [_transition_digest(b) for b in tr.buffers]),
+        "n_transitions": np.asarray([len(b) for b in tr.buffers], np.int64),
+        "meta": np.asarray(json.dumps(vars(args), sort_keys=True)),
+    }
+    # exact parameter bits for every LIVE worker (dead mesh-padding rows are
+    # an implementation detail of the padded run; sliced off here so padded
+    # and unpadded reports align leaf-for-leaf)
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(tr.params)):
+        out[f"param_{i}"] = np.asarray(leaf)[: tr.n_live_workers]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="one multi-device equivalence scenario (see module docstring)")
+    ap.add_argument("--nd", type=int, required=True,
+                    help="mesh size: submesh over the first nd pool devices")
+    ap.add_argument("--device-pool", type=int, default=DEFAULT_DEVICE_POOL,
+                    help="forced host device count (set in XLA_FLAGS pre-init; "
+                         "IDENTICAL across compared scenarios — see docstring)")
+    ap.add_argument("--out", required=True, help="output .npz report path")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--mols-per-worker", type=int, default=2)
+    ap.add_argument("--rollout", default="fleet_sharded")
+    ap.add_argument("--learner", default="packed")
+    ap.add_argument("--chem", default="incremental")
+    ap.add_argument("--sync", default="episode")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="episodes before the recompile-gate window opens")
+    ap.add_argument("--episodes", type=int, default=2,
+                    help="measured episodes (compared across nd)")
+    ap.add_argument("--max-steps", type=int, default=3)
+    ap.add_argument("--updates-per-episode", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-candidates", type=int, default=16)
+    ap.add_argument("--hidden", default="32",
+                    help="comma-separated QNetwork hidden sizes")
+    ap.add_argument("--epsilon-decay", type=float, default=0.9)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    out = run_scenario(args)
+    np.savez(args.out, **out)
+    print(f"[verify] nd={args.nd} W={args.workers} rollout={args.rollout} "
+          f"learner={args.learner} chem={args.chem} sync={args.sync}: "
+          f"{int(out['warmup_compiles'])} warmup compiles, "
+          f"{int(out['recompiles_after_warmup'])} recompiles after warmup, "
+          f"{int(out['n_transitions'].sum())} transitions -> {args.out}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

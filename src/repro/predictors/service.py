@@ -89,6 +89,32 @@ class Properties:
         return self.ip is not None
 
 
+class OracleService:
+    """Deterministic, jit-free ``PropertyService`` stand-in backed by the
+    chemistry oracles — identical answers in every process, no predictor
+    training, no XLA compiles.
+
+    THE shared stub for every harness that wants properties out of the
+    equation: the tier-1 test matrices (tests/conftest.py re-exports it),
+    the chemistry benchmarks, and the multi-device truth run
+    (``repro.launch.verify``) — whose cross-process bit-equality pins
+    silently depend on all of them predicting identically, which is why
+    there is exactly one implementation.  ``predict`` entries are counted
+    in ``n_calls`` so dispatch-per-step tests can assert batching.
+    """
+
+    def __init__(self):
+        from repro.chem.oracle import oracle_bde, oracle_ip
+        self._bde, self._ip, self._ok = oracle_bde, oracle_ip, has_valid_conformer
+        self.n_calls = 0
+
+    def predict(self, mols: Sequence[Molecule]) -> list[Properties]:
+        self.n_calls += 1
+        return [Properties(bde=self._bde(m),
+                           ip=self._ip(m) if self._ok(m) else None)
+                for m in mols]
+
+
 @dataclass
 class PropertyService:
     bde_model: AlfabetS

@@ -1,0 +1,78 @@
+"""Shared driver for the multi-device equivalence suite.
+
+Each scenario runs as a ``repro.launch.verify`` SUBPROCESS because
+``--xla_force_host_platform_device_count`` must be set in ``XLA_FLAGS``
+before jax initialises — the parent pytest process keeps its own device
+count (whatever CI forced), the children always force the verifier's fixed
+device pool and size their mesh with ``--nd``.  Children of one scenario
+are launched concurrently: each is single-scenario and mostly compile-bound,
+so overlapping them roughly halves suite wall time on a 2-core host.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[2]
+SRC = REPO / "src"
+CHILD_TIMEOUT_S = 600
+
+
+def run_cells(tmp_path, nds, **kw) -> dict[int, dict[str, np.ndarray]]:
+    """Run one scenario at every requested mesh size concurrently; return
+    ``{nd: report arrays}`` (see repro.launch.verify for the report keys)."""
+    procs = {}
+    for nd in nds:
+        out = Path(tmp_path) / f"nd{nd}.npz"
+        cmd = [sys.executable, "-m", "repro.launch.verify",
+               "--nd", str(nd), "--out", str(out)]
+        for k, v in kw.items():
+            cmd += ["--" + k.replace("_", "-"), str(v)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+        procs[nd] = (subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                                      stderr=subprocess.STDOUT, text=True), out)
+    results = {}
+    try:
+        for nd, (p, out) in procs.items():
+            stdout, _ = p.communicate(timeout=CHILD_TIMEOUT_S)
+            assert p.returncode == 0, \
+                f"verify child nd={nd} exited {p.returncode}:\n{stdout}"
+            with np.load(out) as z:
+                results[nd] = {k: z[k] for k in z.files}
+    finally:
+        # a hung child (and its unreaped siblings) must not outlive the
+        # test and starve every later scenario of the host's cores
+        for p, _ in procs.values():
+            if p.poll() is None:
+                p.kill()
+                p.communicate()
+    return results
+
+
+def assert_equivalent(ref: dict, other: dict, ctx: str) -> None:
+    """The nd > 1 run must reproduce the nd = 1 reference EXACTLY:
+    transitions (per-worker stream digests), loss and reward trajectories,
+    and every live worker's parameter bits."""
+    assert list(other["transition_digests"]) == list(ref["transition_digests"]), \
+        f"{ctx}: transition streams diverged from the nd=1 reference"
+    np.testing.assert_array_equal(
+        other["n_transitions"], ref["n_transitions"],
+        err_msg=f"{ctx}: per-worker transition counts diverged")
+    np.testing.assert_array_equal(
+        other["losses"], ref["losses"],
+        err_msg=f"{ctx}: loss trajectory diverged")
+    np.testing.assert_array_equal(
+        other["rewards"], ref["rewards"],
+        err_msg=f"{ctx}: reward trajectory diverged")
+    param_keys = sorted(k for k in ref if k.startswith("param_"))
+    assert param_keys == sorted(k for k in other if k.startswith("param_"))
+    for k in param_keys:
+        np.testing.assert_array_equal(
+            other[k], ref[k],
+            err_msg=f"{ctx}: parameter leaf {k} diverged (bit equality required)")

@@ -1,0 +1,58 @@
+"""The multi-device truth run: the (rollout x learner x chem x sync)
+equivalence matrix re-run at nd in {2, 4} forced host devices and pinned —
+transitions, loss trajectories and parameters bit-identical to the nd = 1
+reference of the same seed — with the recompiles-after-warmup gate held at
+0, plus the ragged fleets (W not divisible by nd) that pad to the mesh with
+dead worker slots.
+
+Each cell spawns one ``repro.launch.verify`` subprocess per mesh size (the
+XLA_FLAGS-before-jax-init constraint; see mdhelpers).  The four cells cover
+every rollout mode, every learner mode, both chem modes and both sync modes
+at least once; the in-process tier-1 matrices (tests/test_rollout.py,
+tests/test_learner.py) already pin all mode pairs against each other at
+nd = 1, so cross-mode x cross-nd coverage composes.
+"""
+
+import pytest
+
+from mdhelpers import assert_equivalent, run_cells
+
+# every rollout mode, learner mode, chem mode and sync mode appears >= once
+CELLS = (
+    dict(rollout="fleet_sharded", learner="packed", chem="incremental",
+         sync="episode"),
+    dict(rollout="fleet_pipelined", learner="packed_pipelined",
+         chem="incremental", sync="step"),
+    dict(rollout="fleet", learner="dense", chem="full", sync="episode"),
+    dict(rollout="per_worker", learner="dense", chem="full", sync="step"),
+)
+_GATED = ("fleet", "fleet_sharded", "fleet_pipelined")  # recompile-gated modes
+
+
+@pytest.mark.parametrize(
+    "cell", CELLS,
+    ids=lambda c: f"{c['rollout']}-{c['learner']}-{c['chem']}-{c['sync']}")
+def test_matrix_cell_identical_across_nd(tmp_path, cell):
+    res = run_cells(tmp_path, (1, 2, 4), **cell)
+    assert int(res[1]["warmup_compiles"]) > 0   # the counter observes children
+    for nd in (2, 4):
+        assert int(res[nd]["n_devices"]) == nd  # the child really ran sharded
+        assert_equivalent(res[1], res[nd], f"nd={nd} {cell}")
+        if cell["rollout"] in _GATED:
+            assert int(res[nd]["recompiles_after_warmup"]) == 0, \
+                f"nd={nd} {cell}: sharded path recompiled after warmup"
+    if cell["rollout"] in _GATED:
+        assert int(res[1]["recompiles_after_warmup"]) == 0
+
+
+@pytest.mark.parametrize("sync", ["episode", "step"])
+def test_ragged_fleet_pads_to_mesh(tmp_path, sync):
+    """W = 6 on a 4-device mesh: two dead padding slots, and results
+    identical to the unpadded nd = 1 W = 6 run — the masked cross-worker
+    means ignore the dead slots in BOTH sync regimes."""
+    res = run_cells(tmp_path, (1, 4), workers=6, sync=sync)
+    assert int(res[1]["n_padded_workers"]) == 6     # nd=1: no padding
+    assert int(res[4]["n_live_workers"]) == 6
+    assert int(res[4]["n_padded_workers"]) == 8     # padded to the mesh
+    assert int(res[4]["recompiles_after_warmup"]) == 0
+    assert_equivalent(res[1], res[4], f"ragged W=6 nd=4 sync={sync}")

@@ -1,0 +1,48 @@
+"""Hypothesis random-seed layer over the multi-device matrix (the
+tests/test_rollout.py seed-layer idiom applied across mesh sizes): for
+random seeds and fleet sizes W in {4, 8}, a downsized scenario (short
+episodes, tiny network) must produce bit-identical parameters, losses and
+transition streams at nd in {1, 2, 4}.
+
+W = 4 at nd = 4 puts ONE worker per device — the regime where a vmap'd
+per-worker update lowers as a batch-1 dot and drifts (the bug the scan-
+based update in core/distributed.py fixes); keeping it in the sampled set
+pins that fix under seed variation.
+"""
+
+import tempfile
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # declared in pyproject [test]; degrade to a skip
+    HAVE_HYPOTHESIS = False
+
+from mdhelpers import assert_equivalent, run_cells
+
+# downsized: 1 episode, 2 env steps, tiny net — each example still spawns
+# three jax subprocesses, so the example budget stays small
+_SCENARIO = dict(warmup=0, episodes=1, max_steps=2, updates_per_episode=1,
+                 batch_size=2, hidden="16", rollout="fleet_sharded",
+                 learner="packed", chem="incremental")
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=2, deadline=None)
+    @given(seed=st.integers(0, 2**20),
+           W=st.sampled_from([4, 8]),
+           sync=st.sampled_from(["episode", "step"]))
+    def test_seeded_matrix_bit_identical_across_nd(seed, W, sync):
+        # hypothesis reuses function-scoped fixtures across examples, so no
+        # pytest tmp_path here; a self-cleaning TemporaryDirectory instead
+        with tempfile.TemporaryDirectory(prefix="mdseed_") as tmp:
+            res = run_cells(tmp, (1, 2, 4), workers=W, seed=seed, sync=sync,
+                            **_SCENARIO)
+        for nd in (2, 4):
+            assert_equivalent(res[1], res[nd],
+                              f"seed={seed} W={W} sync={sync} nd={nd}")
+else:
+    def test_seeded_matrix_bit_identical_across_nd():
+        pytest.importorskip("hypothesis")

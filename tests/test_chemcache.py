@@ -1,0 +1,178 @@
+"""ChemCache under concurrency: the fleet-wide cache is shared between the
+``fleet_pipelined`` host enumeration threads and (legacy path) the
+per-worker envs, so ``get``/``put``/``stats`` race by design.  These tests
+hammer that surface from ``pipeline_threads``-style worker pools and pin
+
+* counter consistency: every lookup is counted exactly once, and a
+  ``stats()`` snapshot taken mid-flight is internally consistent (the
+  hit/miss/relabel split sums to the lookups observed so far),
+* entry integrity: a concurrently-served entry always carries the packed
+  fingerprint bits of the molecule it is keyed on, read-only,
+* the relabel guard under contention: an isomorphic but differently
+  labelled twin never replaces the incumbent entry, no matter the
+  interleaving,
+* LRU bounds: eviction churn from many threads never grows the cache past
+  capacity.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.chem.actions import enumerate_actions
+from repro.chem.chemcache import ChemCache, molecule_signature
+from repro.chem.fingerprint import batch_morgan_fingerprints
+from repro.chem.molecule import Molecule
+from repro.chem.smiles import from_smiles
+
+SMILES = ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O",
+          "OC1=CC=CC=C1O", "CC1=C(N)C(C)=C(N)C(C)=C1O",
+          "OC1=CC=C(C=C1)C(C)(C)C", "CC(C)C1=CC=CC=C1O", "NC1=CC=CC=C1O")
+N_THREADS = 4          # the engine's pipeline_threads regime
+OPS_PER_THREAD = 250
+
+
+def _reference_entries(mols):
+    """Single-threaded ground truth: (actions, packed fps) per molecule."""
+    out = []
+    for m in mols:
+        acts = enumerate_actions(m)
+        fps = batch_morgan_fingerprints([a.result for a in acts])
+        out.append((acts, np.packbits(fps.astype(bool), axis=-1)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def ref():
+    mols = [from_smiles(s) for s in SMILES]
+    return mols, _reference_entries(mols)
+
+
+def _hammer(cache, mols, entries, errors, lookup_counts, tid, barrier):
+    rng = np.random.default_rng(1000 + tid)
+    barrier.wait()
+    n_lookups = 0
+    try:
+        for _ in range(OPS_PER_THREAD):
+            i = int(rng.integers(len(mols)))
+            entry = cache.get(mols[i])
+            n_lookups += 1
+            if entry is None:
+                acts, packed = entries[i]
+                cache.put(mols[i], acts, packed.copy())
+            else:
+                if entry.packed_fps.flags.writeable:
+                    raise AssertionError("served entry is writable")
+                if entry.signature != molecule_signature(mols[i]):
+                    raise AssertionError("entry signature mismatch")
+                if not np.array_equal(entry.packed_fps, entries[i][1]):
+                    raise AssertionError("entry bits do not match its key")
+    except Exception as e:  # noqa: BLE001 - surfaced by the main thread
+        errors.append(e)
+    finally:
+        lookup_counts[tid] = n_lookups
+
+
+@pytest.mark.parametrize("capacity", [4, 1024])
+def test_concurrent_lookup_insert_counters_and_entries(ref, capacity):
+    """capacity=4 (< distinct keys) forces eviction churn under contention;
+    capacity=1024 exercises the warm pure-hit regime."""
+    mols, entries = ref
+    cache = ChemCache(capacity=capacity)
+    errors, counts = [], [0] * N_THREADS
+    barrier = threading.Barrier(N_THREADS)
+    threads = [threading.Thread(target=_hammer,
+                                args=(cache, mols, entries, errors, counts, t,
+                                      barrier))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    st = cache.stats()
+    assert st["hits"] + st["misses"] + st["relabel_misses"] == sum(counts)
+    assert len(cache) <= capacity
+    assert 0.0 <= st["hit_rate"] <= 1.0
+    # the warm large cache ends up fully populated and hit-dominated
+    if capacity >= len(mols):
+        assert st["relabel_misses"] == 0
+        assert st["hits"] > st["misses"] >= len(mols)
+
+
+def test_stats_snapshot_consistent_while_hammered(ref):
+    """A stats() reader racing the mutators must always see a consistent
+    split: the three counters sum to a value some mutator has reached, the
+    hit rate derives from the SAME snapshot, and resets are atomic."""
+    mols, entries = ref
+    cache = ChemCache(capacity=16)
+    errors, counts = [], [0] * N_THREADS
+    barrier = threading.Barrier(N_THREADS + 1)
+    threads = [threading.Thread(target=_hammer,
+                                args=(cache, mols, entries, errors, counts, t,
+                                      barrier))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    max_total = N_THREADS * OPS_PER_THREAD
+    while any(t.is_alive() for t in threads):
+        st = cache.stats()
+        total = st["hits"] + st["misses"] + st["relabel_misses"]
+        assert 0 <= total <= max_total
+        if total:
+            assert st["hit_rate"] == st["hits"] / total
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    cache.reset_stats()
+    st = cache.stats()
+    assert (st["hits"], st["misses"], st["relabel_misses"]) == (0, 0, 0)
+
+
+def test_relabel_twin_never_replaces_incumbent_under_contention(ref):
+    """Threads alternately pushing a molecule and its relabelled twin: the
+    first labelling in wins and every later conflicting put is refused, so
+    a get for EACH labelling always recomputes or serves its own bits."""
+    mols, entries = ref
+    mol = mols[1]
+    acts, packed = entries[1]
+    perm = np.random.default_rng(3).permutation(mol.num_atoms)
+    twin = Molecule(mol.elements[perm], mol.bonds[np.ix_(perm, perm)])
+    assert twin.canonical_key() == mol.canonical_key()
+    twin_acts = enumerate_actions(twin)
+    twin_packed = np.packbits(batch_morgan_fingerprints(
+        [a.result for a in twin_acts]).astype(bool), axis=-1)
+
+    cache = ChemCache(capacity=8)
+    cache.put(mol, acts, packed.copy())          # the incumbent labelling
+    incumbent_sig = molecule_signature(mol)
+    errors = []
+    barrier = threading.Barrier(N_THREADS)
+
+    def fight(tid):
+        rng = np.random.default_rng(tid)
+        barrier.wait()
+        try:
+            for _ in range(OPS_PER_THREAD):
+                if rng.random() < 0.5:
+                    assert cache.get(twin) is None      # relabel miss, always
+                    cache.put(twin, twin_acts, twin_packed.copy())
+                else:
+                    e = cache.get(mol)
+                    assert e is not None and e.signature == incumbent_sig
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=fight, args=(t,))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    st = cache.stats()
+    assert st["relabel_misses"] > 0
+    final = cache.get(mol)
+    assert final is not None and final.signature == incumbent_sig

@@ -78,6 +78,43 @@ def test_greedy_optimize_and_ofr():
 
 
 # ------------------------------------------------------------------ #
+# mesh padding arithmetic + trainer accounting (nd = 1 view; the nd > 1
+# equivalence itself is pinned by the tests/multidevice subprocess suite)
+# ------------------------------------------------------------------ #
+def test_padded_worker_count_arithmetic():
+    from types import SimpleNamespace
+    from repro.launch.mesh import padded_worker_count
+    mesh4 = SimpleNamespace(devices=np.empty(4))
+    assert padded_worker_count(6, mesh4) == 8
+    assert padded_worker_count(8, mesh4) == 8
+    assert padded_worker_count(1, mesh4) == 4
+    mesh1 = SimpleNamespace(devices=np.empty(1))
+    assert padded_worker_count(7, mesh1) == 7
+    with pytest.raises(ValueError, match="positive"):
+        padded_worker_count(0, mesh4)
+
+
+def test_trainer_uses_host_mesh_and_pads_to_it():
+    """The trainer's default mesh is launch.mesh.make_host_mesh (ONE
+    construction code path) and its padded width tiles that mesh; on this
+    1-device host any W — including odd ones that a multi-device mesh
+    would pad — stays unpadded."""
+    from repro.launch.mesh import make_host_mesh
+    tr = _trainer("episode")
+    assert tr.mesh.axis_names == make_host_mesh().axis_names == ("data",)
+    assert tr.mesh.devices.size == make_host_mesh().devices.size
+    assert tr.n_live_workers == tr.cfg.n_workers == 2
+    assert tr.n_padded_workers == tr.engine.n_workers == 2
+    assert tr.n_padded_workers % tr.mesh.devices.size == 0
+
+
+def test_loss_scalar_ignores_dead_padding_rows():
+    tr = _trainer("episode")
+    tr.n_live_workers = 2                      # live prefix of a padded vector
+    assert tr._loss_scalar(np.asarray([1.0, 3.0, 99.0, -7.0])) == 2.0
+
+
+# ------------------------------------------------------------------ #
 # optimizer / checkpoint substrate
 # ------------------------------------------------------------------ #
 def test_adam_minimises_quadratic():

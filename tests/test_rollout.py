@@ -256,6 +256,41 @@ def test_pipelined_matches_reference_under_zero_candidate_deaths(monkeypatch):
 
 
 # ------------------------------------------------------------------ #
+# mesh padding: dead workers beyond the live fleet (engine-level; the
+# trainer-level nd > 1 equivalence lives in tests/multidevice)
+# ------------------------------------------------------------------ #
+def test_engine_mesh_padding_is_transition_invisible():
+    """An engine padded to a larger mesh width (dead workers own no slots)
+    must produce the exact transition stream of the unpadded engine, accept
+    per-LIVE-worker buffer lists, and never write a dead worker's buffer."""
+    streams = []
+    for pad in (None, 4):
+        engine = RolloutEngine([[MOLS[0]], [MOLS[1]]], EnvConfig(max_steps=3),
+                               pad_workers_to=pad)
+        agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=3,
+                         network=QNetwork(hidden=(32,)))
+        bufs = [ReplayBuffer(100, seed=5), ReplayBuffer(100, seed=6)]
+        recs = engine.run_episode(agent, _OracleService(), RewardConfig(), bufs)
+        assert engine.n_workers == (pad or 2)
+        assert engine.n_live_workers == 2
+        assert {r.worker for r in recs} == {0, 1}       # dead workers silent
+        streams.append([_transitions(b) for b in bufs])
+    assert streams[0] == streams[1]
+
+
+def test_engine_pad_buffers_validates_length():
+    engine = RolloutEngine([[MOLS[0]], [MOLS[1]]], EnvConfig(max_steps=2),
+                           pad_workers_to=4)
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=3,
+                     network=QNetwork(hidden=(32,)))
+    with pytest.raises(ValueError, match="buffers"):
+        engine.step(agent, _OracleService(), RewardConfig(),
+                    [ReplayBuffer(10, seed=1)] * 3)     # neither live nor padded
+    with pytest.raises(ValueError, match="pad_workers_to"):
+        RolloutEngine([[MOLS[0]], [MOLS[1]]], pad_workers_to=1)
+
+
+# ------------------------------------------------------------------ #
 # capacity ladders (pure)
 # ------------------------------------------------------------------ #
 def test_candidate_capacity_table_scales_with_fleet():
