@@ -230,6 +230,7 @@ def smoke(W: int = 8) -> None:
     dense_bytes = dense_nbytes_equivalent(tr._stacked_sample_packed_np())
     ratio = dense_bytes / m["h2d_bytes_per_update"]
     emit(f"train.smoke.w{W}.h2d_reduction", round(ratio, 1), "x", "gate: >= 30")
+    emit(f"train.smoke.w{W}.updates_per_s", round(m["updates_per_s"], 2), "upd/s")
     emit(f"train.smoke.w{W}.recompiles_after_warmup", m["recompiles"],
          "compiles", "gate: must be 0")
     emit(f"train.smoke.w{W}.update_shapes",

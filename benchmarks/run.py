@@ -3,8 +3,15 @@
     PYTHONPATH=src python -m benchmarks.run                 # everything, quick
     PYTHONPATH=src python -m benchmarks.run --only env,cache
     PYTHONPATH=src python -m benchmarks.run --scale full
+    PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_PR6.json
 
 Prints ``name,value,unit[,derived]`` CSV; writes experiments/bench/results.json.
+
+``--bench-json PATH`` instead runs the training-free smoke benches plus the
+W=512 measured acting-bytes cell and writes a standing perf-trajectory
+snapshot (steps/s, updates/s, acting H2D bytes/step, chem cache hit rate,
+recompiles-after-warmup) to PATH — the committed ``BENCH_*.json`` series
+that lets successive PRs be compared on one box.
 """
 
 from __future__ import annotations
@@ -19,11 +26,66 @@ BENCHES = ("env", "fingerprint", "cache", "rollout", "train", "models",
            "properties", "qed_plogp", "sync_modes", "kernels", "roofline")
 
 
+def bench_json(path: str) -> None:
+    """Write the perf-trajectory snapshot (see module docstring): smoke
+    benches only — training-free, minutes not hours — plus the measured
+    W=512 dense-vs-packed acting H2D cell."""
+    import json
+    import platform
+
+    import jax
+
+    from benchmarks import bench_env, bench_rollout, bench_train
+
+    bench_rollout.smoke(16)
+    bench_train.smoke(8)
+    bench_env.smoke(16)
+    h2d = bench_rollout.measure_acting_h2d(512)
+
+    def val(key):
+        return RESULTS[key]["value"] if key in RESULTS else None
+
+    snapshot = {
+        "schema": "bench-snapshot-v1",
+        "host": {"platform": platform.platform(),
+                 "backend": jax.default_backend(),
+                 "devices": jax.device_count()},
+        "summary": {
+            "rollout_steps_per_s_w16_pipelined_packed":
+                val("rollout.smoke.w16.steps_per_s"),
+            "learner_updates_per_s_w8_packed_pipelined":
+                val("train.smoke.w8.updates_per_s"),
+            "acting_h2d_bytes_per_step_w512_dense":
+                int(h2d["dense_bytes_per_step"]),
+            "acting_h2d_bytes_per_step_w512_packed":
+                int(h2d["packed_bytes_per_step"]),
+            "acting_h2d_reduction_w512": round(h2d["reduction"], 1),
+            "learner_h2d_reduction_w8": val("train.smoke.w8.h2d_reduction"),
+            "chem_cache_hit_rate_w16": val("env.smoke.w16.cache_hit_rate"),
+            "recompiles_after_warmup": max(
+                int(v["value"]) for k, v in RESULTS.items()
+                if k.endswith("recompiles_after_warmup")),
+        },
+        "metrics": dict(sorted(RESULTS.items())),
+    }
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2, default=str)
+        f.write("\n")
+    print(f"\n[bench-json] wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of bench names")
     ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="write the perf-trajectory snapshot to PATH and exit "
+                         "(smoke benches + measured W=512 acting bytes)")
     args = ap.parse_args()
+
+    if args.bench_json:
+        bench_json(args.bench_json)
+        return
 
     names = args.only.split(",") if args.only else list(BENCHES)
     t0 = time.time()

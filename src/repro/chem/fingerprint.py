@@ -73,6 +73,23 @@ def morgan_fingerprint(
     return fold_hashes(atom_env_hashes(mol, radius), n_bits, counts=counts)
 
 
+def pack_fps(fps: np.ndarray) -> np.ndarray:
+    """Bit-pack {0,1}-valued fingerprint rows: f32[..., FP_BITS] ->
+    u8[..., FP_BITS/8].
+
+    THE bit-order contract for every packed fingerprint in the repo
+    (replay storage, the packed learner batches, the packed acting
+    planes): ``np.packbits`` big-endian-within-byte, so fingerprint bit
+    ``8*i + k`` is bit ``MSB-k`` of byte ``i``.  The inverse transforms
+    are pinned to it in lockstep — ``replay.unpack_fp`` /
+    ``replay.densify_sample`` (host), ``core.packed_batch.unpack_bits``
+    (jit-side shift/mask), and the ``kernels/packed_qnet`` bit-plane
+    matmuls (plane k multiplies weight rows ``k::8``).  The round trip
+    is exact because fingerprints are {0,1}-valued, which is what lets
+    packed paths stay BIT-identical to their dense references."""
+    return np.packbits(fps.astype(bool), axis=-1)
+
+
 def batch_morgan_fingerprints(
     mols: list[Molecule],
     radius: int = FP_RADIUS,

@@ -33,7 +33,8 @@ from repro.core.replay import ReplayBuffer, Transition
 from repro.core.rollout import CHEM_MODES, RolloutEngine, StepRecord, AgentFleetPolicy
 from repro.core.env import MoleculeEnv, BatchedEnv, EnvConfig
 from repro.core.distributed import (
-    DistributedTrainer, TrainerConfig, LEARNER_MODES, ROLLOUT_MODES,
+    DistributedTrainer, TrainerConfig, ACTING_MODES, LEARNER_MODES,
+    ROLLOUT_MODES,
 )
 from repro.core.finetune import fine_tune
 from repro.core.filter import filter_molecules, FilterCriteria
@@ -44,6 +45,7 @@ __all__ = [
     "ReplayBuffer", "Transition",
     "RolloutEngine", "StepRecord", "AgentFleetPolicy", "CHEM_MODES",
     "MoleculeEnv", "BatchedEnv", "EnvConfig",
-    "DistributedTrainer", "TrainerConfig", "LEARNER_MODES", "ROLLOUT_MODES",
+    "DistributedTrainer", "TrainerConfig", "ACTING_MODES", "LEARNER_MODES",
+    "ROLLOUT_MODES",
     "fine_tune", "filter_molecules", "FilterCriteria",
 ]

@@ -66,6 +66,25 @@ class QNetwork:
         """
         return jax.vmap(self.apply)(stacked_params, x)
 
+    def apply_stacked_packed(self, stacked_params: dict, bits: jnp.ndarray,
+                             frac: jnp.ndarray) -> jnp.ndarray:
+        """``apply_stacked`` fed PACKED candidate fingerprints.
+
+        ``bits`` u8 ``[W, C, FP_BITS/8]`` (one ``pack_fps`` plane per
+        candidate row), ``frac`` f32 ``[W, C]`` (steps-left feature) ->
+        q ``[W, C]``.  The unpack runs INSIDE the jit (``packed_batch.
+        unpack_bits`` shift/mask, the one fingerprint bit-order contract),
+        so only the ~32x smaller planes cross the host/device boundary;
+        XLA then sees the exact ``[W, C, in_dim]`` operand values the
+        dense ``apply_stacked`` would, which is what keeps packed acting's
+        Q values — and the actions chosen from them — bit-identical to the
+        dense reference (tests/test_rollout.py).
+        """
+        from repro.core.packed_batch import unpack_bits
+
+        x = jnp.concatenate([unpack_bits(bits), frac[..., None]], axis=-1)
+        return jax.vmap(self.apply)(stacked_params, x)
+
 
 @dataclass(frozen=True)
 class DQNConfig:

@@ -48,6 +48,15 @@ tests/test_rollout.py:
                                 enumeration/fingerprinting overlaps step
                                 t's property batch (the 512-worker path).
 
+Orthogonally, ``TrainerConfig.acting`` (``ACTING_MODES``) picks the fleet
+acting-batch REPRESENTATION: ``"packed"`` ships u8 bit planes assembled
+straight from the slots' packed candidate fingerprints and unpacks inside
+the jit (~32x less acting H2D traffic; no host f32 candidate buffer at
+all), ``"packed_async"`` additionally overlaps the Q round-trip with
+pre-drawn action selection and early next-step chemistry, and ``"dense"``
+keeps the seed f32 path as the correctness reference.  All pinned
+transition-identical by tests/test_rollout.py.
+
 Learning (replay sample -> update step) is the acting refactor's twin,
 selected by ``TrainerConfig.learner`` (``LEARNER_MODES``), all three paths
 pinned loss-trajectory-identical by tests/test_learner.py:
@@ -87,7 +96,7 @@ from repro.core.agent import (
 )
 from repro.core.env import BatchedEnv, EnvConfig, StepRecord
 from repro.core.packed_batch import densify_batch, packed_nbytes
-from repro.core.replay import ReplayBuffer
+from repro.core.replay import FP_BYTES, ReplayBuffer
 from repro.core.rollout import CHEM_MODES, STATE_DIM, RolloutEngine
 from repro.core.reward import RewardConfig
 from repro.launch.mesh import fleet_sharding, make_host_mesh, padded_worker_count
@@ -113,6 +122,19 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool | None = None):
 ROLLOUT_MODES = ("fleet", "fleet_sharded", "fleet_pipelined", "per_worker")
 _FLEET_MODES = ("fleet", "fleet_sharded", "fleet_pipelined")
 LEARNER_MODES = ("packed", "packed_pipelined", "dense")
+# fleet acting-batch representation (the learner refactor's acting twin),
+# all pinned transition/param-identical by tests/test_rollout.py:
+#   "packed"        u8 bit planes assembled straight from the slots'
+#                   cand_fps_packed; unpack runs inside the jit (~32x less
+#                   acting H2D traffic than dense)
+#   "packed_async"  packed + the async Q protocol: the dispatch returns a
+#                   device handle, eps-greedy decisions are pre-drawn and
+#                   step t+1 chemistry of exploring slots starts while the
+#                   device computes (fleet_pipelined covers the Q
+#                   round-trip, not just the property batch)
+#   "dense"         the seed [W, C, STATE_DIM] f32 path, kept as the
+#                   correctness reference
+ACTING_MODES = ("packed", "packed_async", "dense")
 
 
 @dataclass(frozen=True)
@@ -123,6 +145,8 @@ class TrainerConfig:
     sync_mode: str = "episode"        # "episode" (DA-MolDQN) | "step" (DDP)
     rollout: str = "fleet"            # see ROLLOUT_MODES (module docstring)
     learner: str = "packed"           # see LEARNER_MODES (module docstring)
+    acting: str = "packed"            # see ACTING_MODES (fleet modes only;
+                                      # per_worker always acts dense)
     chem: str = "incremental"         # candidate chemistry: rollout.CHEM_MODES
                                       # ("full" = per-step recompute reference)
     updates_per_episode: int = 4
@@ -163,33 +187,61 @@ class _FleetView:
     own parameters (vmap'd apply, dense ``[W, Cmax, D]`` layout).
 
     The candidate axis is padded to a rung of the fleet-adaptive capacity
-    ladder (``candidate_capacity_table``) and the dense buffer is a STICKY
+    ladder (``candidate_capacity_table``) and the batch buffer is a STICKY
     high-water mark: capacity only ever grows, and the jit always sees the
     full buffer, so shapes change O(log C) times per run instead of every
     time the per-step max drifts — the property that keeps W=512 free of
     per-step recompiles.  With ``sharded=True`` the dispatch goes through
     the ``shard_map`` fleet fn with the batch placed on the mesh's "data"
     axis next to the (already-sharded) parameters.
+
+    ``acting`` picks the batch representation (``ACTING_MODES``): the
+    dense f32 reference, or the packed u8 bit planes (optionally with the
+    async dispatch/fetch split) — the packed modes never materialise a
+    dense f32 candidate buffer on the host.
     """
 
-    def __init__(self, trainer: "DistributedTrainer", sharded: bool = False):
+    def __init__(self, trainer: "DistributedTrainer", sharded: bool = False,
+                 acting: str = "dense"):
         self.t = trainer
         self.sharded = sharded
+        self.acting = acting
+        # engine-facing protocol switches (see rollout.FleetPolicy)
+        self.wants_packed_states = acting != "dense"
+        self.async_q = acting == "packed_async"
         self._table = candidate_capacity_table(trainer.cfg.n_workers)
         self._dense: np.ndarray | None = None
+        self._bits: np.ndarray | None = None
+        self._frac: np.ndarray | None = None
         self._cap = 0
 
     def reserve(self, max_candidates: int) -> None:
-        """Pre-grow the dense buffer (ladder-rounded) so a known candidate
+        """Pre-grow the batch buffers (ladder-rounded) so a known candidate
         bound never triggers a mid-run growth recompile."""
         cap = candidate_capacity(max_candidates, self._table)
         if cap > self._cap:
             self._cap = cap
             # rows for the PADDED fleet: dead mesh-padding workers keep
-            # all-zero rows, so the [W_pad, C, D] batch tiles the mesh
-            self._dense = np.zeros(
-                (self.t.n_padded_workers, cap, STATE_DIM), np.float32)
+            # all-zero rows, so the [W_pad, C, ...] batch tiles the mesh
+            W_pad = self.t.n_padded_workers
+            if self.wants_packed_states:
+                self._bits = np.zeros((W_pad, cap, FP_BYTES), np.uint8)
+                self._frac = np.zeros((W_pad, cap), np.float32)
+            else:
+                self._dense = np.zeros((W_pad, cap, STATE_DIM), np.float32)
 
+    def warm_dispatch(self) -> None:
+        """Issue one dummy dispatch so the CURRENT capacity's jit shape is
+        compiled eagerly (reserve_candidates counts this as warmup)."""
+        n = self.t.engine.n_workers
+        if self.wants_packed_states:
+            self.fleet_q_fetch(self.fleet_q_dispatch_packed(
+                [np.zeros((1, FP_BYTES), np.uint8)] * n,
+                [np.zeros((1,), np.float32)] * n))
+        else:
+            self.fleet_q_values([np.zeros((1, STATE_DIM), np.float32)] * n)
+
+    # ---- dense reference ---------------------------------------- #
     def fleet_q_values(self, per_worker: list[np.ndarray]) -> list[np.ndarray]:
         counts = [x.shape[0] for x in per_worker]
         if not any(counts):
@@ -200,12 +252,57 @@ class _FleetView:
             dense[w, : x.shape[0]] = x
             dense[w, x.shape[0]:] = 0.0  # clear rows left by the last step
         self.t.n_q_dispatches += 1
+        self.t.acting_h2d_bytes += dense.nbytes
         if self.sharded:
             x = jax.device_put(dense, self.t._fleet_in_sharding)
             q = np.asarray(self.t._fleet_q_sharded(self.t.params, x))
         else:
             q = np.asarray(self.t._fleet_q(self.t.params, jnp.asarray(dense)))
         return [q[w, :n] for w, n in enumerate(counts)]
+
+    # ---- packed protocol (rollout.FleetPolicy) ------------------- #
+    def fleet_q_dispatch_packed(self, bits_pw: list[np.ndarray],
+                                frac_pw: list[np.ndarray]):
+        """Copy the per-worker packed planes into the sticky buffers and
+        dispatch WITHOUT blocking: the returned handle holds the on-device
+        ``jax.Array`` (XLA computes asynchronously; ``fleet_q_fetch`` is
+        the only synchronisation point)."""
+        counts = [b.shape[0] for b in bits_pw]
+        if not any(counts):
+            return None, counts
+        self.reserve(max(counts))
+        bits, frac = self._bits, self._frac
+        for w, (b, f) in enumerate(zip(bits_pw, frac_pw)):
+            n = b.shape[0]
+            bits[w, :n] = b
+            bits[w, n:] = 0   # dead/finished rows: zero planes, never garbage
+            frac[w, :n] = f
+            frac[w, n:] = 0.0
+        self.t.n_q_dispatches += 1
+        self.t.acting_h2d_bytes += bits.nbytes + frac.nbytes
+        if self.sharded:
+            xb = jax.device_put(bits, self.t._fleet_in_sharding)
+            xf = jax.device_put(frac, self.t._fleet_in_sharding)
+            q = self.t._fleet_q_packed_sharded(self.t.params, xb, xf)
+        else:
+            q = self.t._fleet_q_packed(
+                self.t.params, jnp.asarray(bits), jnp.asarray(frac))
+        return q, counts
+
+    def fleet_q_fetch(self, handle) -> list[np.ndarray]:
+        """Block on the device result and slice it back per worker."""
+        q, counts = handle
+        if q is None:
+            return [np.zeros((0,), np.float32) for _ in counts]
+        qh = np.asarray(q)
+        return [qh[w, :n] for w, n in enumerate(counts)]
+
+    def fleet_q_values_packed(self, bits_pw: list[np.ndarray],
+                              frac_pw: list[np.ndarray]) -> list[np.ndarray]:
+        return self.fleet_q_fetch(self.fleet_q_dispatch_packed(bits_pw, frac_pw))
+
+    def plan_action(self, n_candidates: int, worker: int) -> int:
+        return self.t._plan_action(n_candidates, worker)
 
     def select_action(self, q: np.ndarray, worker: int) -> int:
         return self.t._select_action(q, worker)
@@ -267,6 +364,8 @@ class DistributedTrainer:
             raise ValueError(f"sync_mode must be 'episode' or 'step', got {cfg.sync_mode!r}")
         if cfg.chem not in CHEM_MODES:
             raise ValueError(f"chem must be one of {CHEM_MODES}, got {cfg.chem!r}")
+        if cfg.acting not in ACTING_MODES:
+            raise ValueError(f"acting must be one of {ACTING_MODES}, got {cfg.acting!r}")
 
         # size the predictor padding ladder for the fleet-wide per-step batch
         # (one chosen successor per live slot)
@@ -284,7 +383,8 @@ class DistributedTrainer:
              for w in range(W)],
             cfg.env, pipeline_threads=cfg.pipeline_threads,
             chem=cfg.chem, chem_cache=self.chem_cache,
-            pad_workers_to=self.n_padded_workers)
+            pad_workers_to=self.n_padded_workers,
+            packed_states=cfg.acting != "dense")
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         # storage truncates where sample() would anyway (cfg.max_candidates),
         # so the SoA candidate axis never outgrows what training can see
@@ -295,6 +395,7 @@ class DistributedTrainer:
         self.n_q_dispatches = 0  # acting-side jit dispatches (both paths)
         self.n_updates = 0       # learner update steps issued
         self.h2d_update_bytes = 0  # host->device bytes shipped by update batches
+        self.acting_h2d_bytes = 0  # host->device bytes shipped by fleet Q batches
         self._sampler_pool: ThreadPoolExecutor | None = None  # packed_pipelined
 
         # stacked per-worker params [W_pad, ...] sharded over "data"
@@ -319,8 +420,9 @@ class DistributedTrainer:
         self.episode = 0
         self._views = [_WorkerView(self, w) for w in range(W)]
         self._fleet_in_sharding = fleet_sharding(self.mesh)
-        self._fleet_policy = _FleetView(self)
-        self._fleet_policy_sharded = _FleetView(self, sharded=True)
+        self._fleet_policy = _FleetView(self, acting=cfg.acting)
+        self._fleet_policy_sharded = _FleetView(self, sharded=True,
+                                                acting=cfg.acting)
         self._build_fns()
 
     @property
@@ -497,6 +599,24 @@ class DistributedTrainer:
             in_specs=(spec_w, spec_w), out_specs=spec_w,
         ), out_shardings=out_w)
 
+        # packed twins of the two fleet dispatches: [W, C, FP_BITS/8] u8
+        # planes + [W, C] f32 steps-left, unpacked INSIDE the jit (~32x
+        # less acting H2D traffic).  With use_pallas_qnet the evaluation
+        # routes through the stacked bit-plane kernel (pallas on TPU;
+        # unpack-in-jit XLA math everywhere else — identical bits to
+        # apply_stacked on the densified input either way)
+        def fleet_q_packed_body(params, bits, frac):
+            if cfg.dqn.use_pallas_qnet:
+                from repro.kernels.packed_qnet.ops import packed_qnet_stacked
+                return packed_qnet_stacked(params, bits, frac)
+            return net.apply_stacked_packed(params, bits, frac)
+
+        self._fleet_q_packed = jax.jit(fleet_q_packed_body)
+        self._fleet_q_packed_sharded = jax.jit(shard_map(
+            fleet_q_packed_body, mesh=mesh,
+            in_specs=(spec_w, spec_w, spec_w), out_specs=spec_w,
+        ), out_shardings=out_w)
+
     # ------------------------------------------------------------ #
     # training
     # ------------------------------------------------------------ #
@@ -587,9 +707,7 @@ class DistributedTrainer:
         before = view._cap
         view.reserve(max_candidates)
         if view._cap != before:
-            dummy = [np.zeros((1, STATE_DIM), np.float32)
-                     for _ in range(self.engine.n_workers)]
-            view.fleet_q_values(dummy)
+            view.warm_dispatch()
 
     def _select_action(self, q: np.ndarray, w: int) -> int:
         """Decaying eps-greedy from worker ``w``'s private RNG stream."""
@@ -597,6 +715,19 @@ class DistributedTrainer:
         if rng.random() < self.epsilon:
             return int(rng.integers(0, q.shape[0]))
         return int(np.argmax(q))
+
+    def _plan_action(self, n_candidates: int, w: int) -> int:
+        """The pre-draw half of ``_select_action`` for the async acting
+        path: consume worker ``w``'s RNG stream EXACTLY as
+        ``_select_action`` would (one uniform, plus the integer draw on
+        the explore branch) but without needing Q values — return the
+        explored index, or -1 for argmax-once-Q-lands.  The engine
+        resolves -1 with the same ``int(np.argmax(q))``, so the chosen
+        actions are bit-identical to the sync path's."""
+        rng = self._worker_rngs[w]
+        if rng.random() < self.epsilon:
+            return int(rng.integers(0, n_candidates))
+        return -1
 
     def _sync_opt(self, opt_state):
         """Average the float moments across workers; keep the int step."""

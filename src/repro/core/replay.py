@@ -36,7 +36,7 @@ from typing import Iterable
 
 import numpy as np
 
-from repro.chem.fingerprint import FP_BITS
+from repro.chem.fingerprint import FP_BITS, pack_fps
 
 FP_BYTES = FP_BITS // 8
 
@@ -52,7 +52,9 @@ class Transition:
 
 
 def pack_fp(fp: np.ndarray) -> np.ndarray:
-    return np.packbits(fp.astype(bool))
+    """Single-row twin of ``chem.fingerprint.pack_fps`` (the one bit-order
+    contract all packed fingerprints share)."""
+    return pack_fps(fp)
 
 
 def unpack_fp(packed: np.ndarray, n_bits: int = FP_BITS) -> np.ndarray:

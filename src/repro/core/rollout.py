@@ -24,11 +24,12 @@ Two step implementations share every helper:
 
 ``step()``            the CORRECTNESS REFERENCE.  Strictly sequential:
                       enumerate -> Q dispatch -> select -> property batch
-                      -> transitions -> enumerate next.  Every other acting
-                      path (``step_pipelined``, the sharded trainer views)
-                      is pinned transition-identical to this one by
-                      tests/test_rollout.py — change it first, then make
-                      the fast paths match.
+                      -> transitions -> enumerate next.  Driven by a DENSE
+                      policy this defines correctness; every other acting
+                      path (``step_pipelined``, the packed/async policy
+                      protocols, the sharded trainer views) is pinned
+                      transition-identical to it by tests/test_rollout.py
+                      — change it first, then make the fast paths match.
 ``step_pipelined()``  the same transition stream, but step t+1's candidate
                       enumeration + fingerprinting runs on host threads
                       WHILE step t's property batch runs on device (the two
@@ -60,9 +61,10 @@ import numpy as np
 from repro.chem.actions import Action, enumerate_actions
 from repro.chem.chemcache import ChemCache, molecule_signature
 from repro.chem.fingerprint import (
-    FP_BITS, batch_morgan_fingerprints, incremental_fingerprints_grouped)
+    FP_BITS, batch_morgan_fingerprints, incremental_fingerprints_grouped,
+    pack_fps)
 from repro.chem.molecule import ALLOWED_RING_SIZES, Molecule
-from repro.core.replay import ReplayBuffer, Transition, pack_fp, unpack_fp
+from repro.core.replay import FP_BYTES, ReplayBuffer, Transition, unpack_fp
 from repro.core.reward import RewardConfig, compute_reward
 
 STATE_DIM = FP_BITS + 1  # fingerprint ++ steps-left feature
@@ -126,6 +128,21 @@ class FleetPolicy(Protocol):
     (``f32[N_w, STATE_DIM]``, possibly empty) and must evaluate ALL of
     them in a single jit dispatch, returning one ``f32[N_w]`` per worker.
     ``select_action`` draws from the given worker's RNG stream.
+
+    A policy may additionally opt into the PACKED acting protocol by
+    exposing ``wants_packed_states = True``: the engine then never builds
+    the dense f32 state matrices and instead hands over the per-worker
+    ``u8[N_w, FP_BITS/8]`` bit planes + ``f32[N_w]`` steps-left columns
+    through ``fleet_q_values_packed``.  With ``async_q = True`` on top,
+    the engine splits the dispatch (``fleet_q_dispatch_packed`` returns a
+    handle without blocking; ``fleet_q_fetch`` blocks) and pre-draws the
+    eps-greedy decisions through ``plan_action(n_candidates, worker)``
+    while the device computes — ``plan_action`` must consume the worker's
+    RNG stream exactly like ``select_action`` would (one uniform; plus
+    the integer draw on the explore branch) and return the explored index
+    or -1, in which case the engine resolves the greedy branch as
+    ``int(np.argmax(q))`` once the Q values land.  Both packed protocols
+    are pinned bit-identical to this dense one by tests/test_rollout.py.
     """
 
     def fleet_q_values(self, per_worker: Sequence[np.ndarray]) -> list[np.ndarray]: ...
@@ -173,11 +190,16 @@ class RolloutEngine:
     def __init__(self, worker_molecules: Sequence[Sequence[Molecule]],
                  cfg: EnvConfig | None = None, pipeline_threads: int | None = None,
                  chem: str = "full", chem_cache: ChemCache | None = None,
-                 pad_workers_to: int | None = None):
+                 pad_workers_to: int | None = None, packed_states: bool = False):
         if chem not in CHEM_MODES:
             raise ValueError(f"chem must be one of {CHEM_MODES}, got {chem!r}")
         self.cfg = cfg if cfg is not None else EnvConfig()
         self.chem = chem
+        # packed acting: every consumer reads Slot.cand_fps_packed, so chem
+        # may skip rebuilding dense f32 rows for cache hits (cand_fps stays
+        # None) — the fleet-mode contract that no dense f32 candidate
+        # buffer is ever materialised on the host (ROADMAP invariants)
+        self.packed_states = packed_states
         # the cache may be shared fleet-wide (the trainer hands the same
         # instance to every engine/env it builds)
         self.chem_cache = chem_cache if chem_cache is not None else \
@@ -281,7 +303,7 @@ class RolloutEngine:
         flat = [a.result for acts in cands for a in acts]
         fps = batch_morgan_fingerprints(flat) if flat else \
             np.zeros((0, FP_BITS), np.float32)
-        packed = np.packbits(fps.astype(bool), axis=-1)
+        packed = pack_fps(fps)
         t2 = time.perf_counter()
         with self._stats_lock:
             self.chem_enum_s += t1 - t0
@@ -328,16 +350,19 @@ class RolloutEngine:
             fps_by = incremental_fingerprints_grouped(
                 [mols[i] for i in uniq], acts_by)
             for i, acts, fps in zip(uniq, acts_by, fps_by):
-                packed = np.packbits(fps.astype(bool), axis=-1)
+                packed = pack_fps(fps)
                 if cache is not None:
                     cache.put(mols[i], acts, packed)
                 out[i] = (acts, fps, packed)
             for i, rep in dup_of.items():
                 out[i] = out[rep]
         # cache hits rebuild the dense rows from the packed bits (exact:
-        # the fingerprints are {0,1}-valued)
-        out = [(acts, unpack_fp(packed) if fps is None else fps, packed)
-               for acts, fps, packed in out]
+        # the fingerprints are {0,1}-valued) — unless the engine runs
+        # packed acting, where nothing ever reads the dense rows and the
+        # unpack would be the hot path's only host f32 materialisation
+        if not self.packed_states:
+            out = [(acts, unpack_fp(packed) if fps is None else fps, packed)
+                   for acts, fps, packed in out]
         t2 = time.perf_counter()
         with self._stats_lock:
             self.chem_enum_s += t1 - t0
@@ -417,22 +442,78 @@ class RolloutEngine:
             per_worker_states.append(np.concatenate(stacked, axis=0))
         return per_worker_states
 
+    def _build_states_packed(self, live_by_worker: Sequence[Sequence[Slot]]
+                             ) -> tuple[list[np.ndarray], list[np.ndarray]]:
+        """Per-worker PACKED candidate states, straight from the slots'
+        ``pack_fps`` planes: u8 ``[N_w, FP_BITS/8]`` bits + f32 ``[N_w]``
+        steps-left columns.  The packed twin of ``_build_states`` — no
+        dense f32 fingerprint buffer is materialised on the host (~32x
+        fewer bytes per candidate row)."""
+        bits_pw: list[np.ndarray] = []
+        frac_pw: list[np.ndarray] = []
+        for live in live_by_worker:
+            if not live:
+                bits_pw.append(np.zeros((0, FP_BYTES), np.uint8))
+                frac_pw.append(np.zeros((0,), np.float32))
+                continue
+            bits_pw.append(live[0].cand_fps_packed if len(live) == 1 else
+                           np.concatenate([s.cand_fps_packed for s in live]))
+            frac_pw.append(np.concatenate([
+                np.full((len(s.candidates),),
+                        (s.steps_left - 1) / self.cfg.max_steps, np.float32)
+                for s in live]))
+        return bits_pw, frac_pw
+
+    def _plan_selection(self, live_by_worker: Sequence[Sequence[Slot]],
+                        policy) -> list[list[int]]:
+        """Pre-draw every slot's eps-greedy decision (``plan_action``: the
+        explored index, or -1 for argmax-when-Q-lands) in the reference
+        worker-major slot order — the host-side half of action selection,
+        run while the async Q dispatch is still in flight on device."""
+        return [[policy.plan_action(len(s.candidates), w) for s in live]
+                for w, live in enumerate(live_by_worker)]
+
+    def _dispatch_q(self, live_by_worker: Sequence[Sequence[Slot]],
+                    policy) -> tuple[Sequence[np.ndarray], list[list[int]] | None]:
+        """One fleet Q dispatch in the policy's preferred representation
+        (dense f32 reference, packed u8, or packed + pre-drawn plans)."""
+        if getattr(policy, "wants_packed_states", False):
+            bits_pw, frac_pw = self._build_states_packed(live_by_worker)
+            if getattr(policy, "async_q", False):
+                handle = policy.fleet_q_dispatch_packed(bits_pw, frac_pw)
+                plans = self._plan_selection(live_by_worker, policy)
+                return policy.fleet_q_fetch(handle), plans
+            return policy.fleet_q_values_packed(bits_pw, frac_pw), None
+        return policy.fleet_q_values(self._build_states(live_by_worker)), None
+
     def _select(self, live_by_worker: Sequence[Sequence[Slot]],
-                q_by_worker: Sequence[np.ndarray], policy: FleetPolicy
+                q_by_worker: Sequence[np.ndarray], policy: FleetPolicy,
+                plans: Sequence[Sequence[int]] | None = None
                 ) -> list[tuple[Slot, Action, np.ndarray]]:
-        """Per-worker eps-greedy selection from each worker's RNG stream."""
+        """Per-worker eps-greedy selection from each worker's RNG stream.
+
+        With ``plans`` (the async path) the RNG draws already happened in
+        this exact slot order during ``_plan_selection``; only the greedy
+        markers (-1) are resolved here, from the same ``np.argmax`` the
+        sync branch uses.  The chosen tuple carries the PACKED fingerprint
+        row — it becomes the replay ``state_fp`` without a repack."""
         chosen: list[tuple[Slot, Action, np.ndarray]] = []
         for w, live in enumerate(live_by_worker):
             q_all, off = q_by_worker[w], 0
-            for s in live:
-                ln = s.cand_fps.shape[0]
+            for i, s in enumerate(live):
+                ln = len(s.candidates)
                 if ln == 0:  # _apply_enum kills candidate-less slots
                     raise RuntimeError(
                         f"invariant violation: live slot (worker {w}, index "
                         f"{s.index}) reached selection with zero candidates")
-                a_idx = policy.select_action(q_all[off:off + ln], w)
+                if plans is None:
+                    a_idx = policy.select_action(q_all[off:off + ln], w)
+                else:
+                    a_idx = plans[w][i]
+                    if a_idx < 0:
+                        a_idx = int(np.argmax(q_all[off:off + ln]))
                 off += ln
-                chosen.append((s, s.candidates[a_idx], s.cand_fps[a_idx]))
+                chosen.append((s, s.candidates[a_idx], s.cand_fps_packed[a_idx]))
         return chosen
 
     def _apply_step(self, chosen, props, reward_cfg: RewardConfig,
@@ -454,11 +535,13 @@ class RolloutEngine:
             if s.best is None or reward > s.best[0]:
                 s.best = (reward, s.current)
             t = Transition(
-                state_fp=pack_fp(fp),
+                # the chosen candidate's ALREADY-packed row (chem packed it
+                # once, pack_fps contract) — no per-transition repack
+                state_fp=fp,
                 steps_left_frac=s.steps_left / self.cfg.max_steps,
                 reward=reward,
                 done=done,
-                next_fps=np.zeros((0, FP_BITS // 8), dtype=np.uint8),
+                next_fps=np.zeros((0, FP_BYTES), dtype=np.uint8),
                 next_steps_left_frac=0.0,
             )
             if done:
@@ -507,10 +590,10 @@ class RolloutEngine:
             return []
 
         # ---- ONE Q dispatch over all candidates of all workers -------- #
-        q_by_worker = policy.fleet_q_values(self._build_states(live_by_worker))
+        q_by_worker, plans = self._dispatch_q(live_by_worker, policy)
 
         # ---- per-worker eps-greedy selection --------------------------- #
-        chosen = self._select(live_by_worker, q_by_worker, policy)
+        chosen = self._select(live_by_worker, q_by_worker, policy, plans)
 
         # ---- ONE property batch over the chosen successors fleet-wide -- #
         props = service.predict([a.result for _, a, _ in chosen])
@@ -519,6 +602,16 @@ class RolloutEngine:
         self._enumerate_all()
         self._flush_dead(buffers)
         return records
+
+    def _submit_enum(self, pairs: Sequence[tuple[Slot, Molecule]]) -> list:
+        """Shard ``(slot, successor)`` chemistry across the host pool."""
+        if not pairs:
+            return []
+        pool = self._get_pool()
+        mols = [m for _, m in pairs]
+        shard = -(-len(mols) // self._pipeline_threads)
+        return [pool.submit(self._compute_enum, mols[i:i + shard])
+                for i in range(0, len(mols), shard)]
 
     def step_pipelined(
         self,
@@ -531,31 +624,56 @@ class RolloutEngine:
         step t+1's candidate enumeration + fingerprinting is sharded across
         host threads while the fleet property batch runs.  Both depend only
         on the selected actions, not on each other, so the transition
-        stream is identical to the reference."""
+        stream is identical to the reference.
+
+        With an ``async_q`` packed policy the overlap additionally covers
+        the Q round-trip itself: the dispatch returns a device handle
+        without blocking, the eps-greedy decisions are pre-drawn
+        (``_plan_selection``, identical RNG order), and the EXPLORING
+        survivors' next-step chemistry — their successors are known before
+        any Q value is — starts on the pool while the device still
+        computes.  Only then does the fetch block.  Per-slot chemistry
+        results are composition-independent (pinned by the chem matrix),
+        so splitting the enumeration batch changes nothing downstream."""
         policy = as_fleet_policy(policy)
         buffers = self._pad_buffers(buffers)
         live_by_worker = self._begin_step(buffers)
         if live_by_worker is None:
             return []
 
-        q_by_worker = policy.fleet_q_values(self._build_states(live_by_worker))
-        chosen = self._select(live_by_worker, q_by_worker, policy)
+        early: list[tuple[Slot, Molecule]] = []
+        if getattr(policy, "wants_packed_states", False) and \
+                getattr(policy, "async_q", False):
+            bits_pw, frac_pw = self._build_states_packed(live_by_worker)
+            handle = policy.fleet_q_dispatch_packed(bits_pw, frac_pw)
+            plans = self._plan_selection(live_by_worker, policy)
+            early = [(s, s.candidates[p].result)
+                     for w, live in enumerate(live_by_worker)
+                     for s, p in zip(live, plans[w])
+                     if p >= 0 and s.steps_left - 1 > 0]
+            early_futs = self._submit_enum(early)
+            q_by_worker = policy.fleet_q_fetch(handle)
+        else:
+            q_by_worker, plans = self._dispatch_q(live_by_worker, policy)
+            early_futs = []
+        chosen = self._select(live_by_worker, q_by_worker, policy, plans)
 
         # slots still alive after this step, in the reference enumeration
         # order (worker-major, slot order); their successors' candidates are
-        # what the end-of-step enumeration would compute
-        nxt = [(s, a.result) for s, a, _ in chosen if s.steps_left - 1 > 0]
-        futures = []
-        if nxt:
-            pool = self._get_pool()
-            mols = [m for _, m in nxt]
-            shard = -(-len(mols) // self._pipeline_threads)
-            futures = [pool.submit(self._compute_enum, mols[i:i + shard])
-                       for i in range(0, len(mols), shard)]
+        # what the end-of-step enumeration would compute.  Exploring slots
+        # already submitted above (Action.result is memoised, so the chosen
+        # molecule is the very object the early chemistry enumerated).
+        early_slots = {id(s) for s, _ in early}
+        nxt = [(s, a.result) for s, a, _ in chosen
+               if s.steps_left - 1 > 0 and id(s) not in early_slots]
+        futures = self._submit_enum(nxt)
 
         props = service.predict([a.result for _, a, _ in chosen])
         records = self._apply_step(chosen, props, reward_cfg, buffers)
 
+        if early_futs:
+            self._apply_enum([s for s, _ in early],
+                             [r for f in early_futs for r in f.result()])
         if futures:
             self._apply_enum([s for s, _ in nxt],
                              [r for f in futures for r in f.result()])

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.chem.fingerprint import FP_BITS
-from repro.kernels.packed_qnet.packed_qnet import ROW_BLOCK, packed_qnet_rows
+from repro.kernels.packed_qnet.packed_qnet import (
+    ROW_BLOCK, packed_qnet_rows, packed_qnet_stacked_rows)
 from repro.kernels.packed_qnet.ref import packed_qnet_ref
 
 
@@ -53,3 +54,30 @@ def packed_qnet(params: dict, bits: jnp.ndarray, frac: jnp.ndarray, *,
     q = packed_qnet_rows(bits, frac[:, None].astype(jnp.float32), w1r, w1f,
                          weights[0][1], weights[1:], interpret=interpret)
     return q[:n]
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def packed_qnet_stacked(params: dict, bits: jnp.ndarray, frac: jnp.ndarray, *,
+                        impl: str | None = None,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """The fleet-acting shape: params is a STACKED QNetwork pytree (leaves
+    ``[W, ...]``, one tree per worker); bits u8 [W, C, FP_BITS/8]; frac f32
+    [W, C] -> q f32 [W, C] — the packed twin of ``QNetwork.apply_stacked``."""
+    weights = [(l["w"], l["b"]) for l in params["layers"]]
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla":
+        return jax.vmap(packed_qnet_ref, in_axes=(0, 0, 0))(bits, frac, weights)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = bits.shape[1]
+    padded = max(((n + ROW_BLOCK - 1) // ROW_BLOCK) * ROW_BLOCK, ROW_BLOCK)
+    if padded != n:
+        pad = ((0, 0), (0, padded - n), (0, 0))
+        bits = jnp.pad(bits, pad)
+        frac = jnp.pad(frac, pad[:2])
+    # vmap'd pack_w1: per-worker bit-plane slices [W, 8, FP_BITS/8, H1]
+    w1r, w1f = jax.vmap(pack_w1)(weights[0][0])
+    q = packed_qnet_stacked_rows(bits, frac[..., None].astype(jnp.float32),
+                                 w1r, w1f, weights[0][1], weights[1:],
+                                 interpret=interpret)
+    return q[:, :n]

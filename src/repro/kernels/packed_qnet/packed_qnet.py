@@ -96,3 +96,70 @@ def packed_qnet_rows(
         out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
         interpret=interpret,
     )(bits, frac, *flat_w)
+
+
+def _packed_qnet_stacked_kernel(bits_ref, frac_ref, w1r, w1f, b1,
+                                w2, b2, w3, b3, w4, b4, w5, b5, out_ref):
+    # one (worker, row-block) grid cell: every ref carries a leading
+    # singleton worker axis — squeeze it and run the row kernel's math
+    # under THIS worker's parameter slices
+    bytes32 = bits_ref[0].astype(jnp.int32)              # [rows, 256]
+    frac = frac_ref[0].astype(jnp.float32)               # [rows, 1]
+    h = jax.lax.dot_general(
+        frac, w1f[0], (((1,), (0,)), ((), ()))) + b1[0]
+    for k in range(8):                                   # np.unpackbits order:
+        plane = ((bytes32 >> (7 - k)) & 1).astype(jnp.float32)  # bit k = MSB-k
+        h = h + jax.lax.dot_general(
+            plane, w1r[0][k], (((1,), (0,)), ((), ())))
+    h = jnp.maximum(h, 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w2[0], (((1,), (0,)), ((), ()))) + b2[0], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w3[0], (((1,), (0,)), ((), ()))) + b3[0], 0.0)
+    h = jnp.maximum(jax.lax.dot_general(
+        h, w4[0], (((1,), (0,)), ((), ()))) + b4[0], 0.0)
+    q = jax.lax.dot_general(h, w5[0], (((1,), (0,)), ((), ()))) + b5[0]
+    out_ref[0] = q[:, 0]
+
+
+def packed_qnet_stacked_rows(
+    bits: jnp.ndarray,         # uint8 [W, C, FP_BITS/8]
+    frac: jnp.ndarray,         # f32 [W, C, 1] steps-left feature column
+    w1r: jnp.ndarray,          # f32 [W, 8, FP_BITS/8, H1] bit-plane W1 slices
+    w1f: jnp.ndarray,          # f32 [W, 1, H1] the steps-left rows of W1
+    b1: jnp.ndarray,           # f32 [W, H1]
+    tail: list[tuple[jnp.ndarray, jnp.ndarray]],  # [(w, b)] layers 2..5, [W, ...]
+    *,
+    row_block: int = ROW_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """The fleet-acting shape: grid (W, row blocks).  Each cell evaluates
+    one worker's candidate-row block under that worker's own parameter
+    slices (per-worker parameter selection moves into the BlockSpec index
+    maps — the kernel body is the per-worker row kernel unchanged)."""
+    n_workers, N, n_bytes = bits.shape
+    assert len(tail) == 4, "packed kernel is specialised to the MolDQN 5-layer MLP"
+    row_block = min(row_block, N)
+    assert N % row_block == 0, f"rows {N} % block {row_block}"
+    grid = (n_workers, N // row_block)
+
+    per_w = lambda w: pl.BlockSpec((1,) + w.shape[1:],
+                                   lambda wi, i, nd=w.ndim: (wi,) + (0,) * (nd - 1))
+    in_specs = [
+        pl.BlockSpec((1, row_block, n_bytes), lambda wi, i: (wi, i, 0)),
+        pl.BlockSpec((1, row_block, 1), lambda wi, i: (wi, i, 0)),
+        per_w(w1r), per_w(w1f), per_w(b1),
+    ]
+    flat_w = [w1r, w1f, b1]
+    for w, b in tail:
+        in_specs += [per_w(w), per_w(b)]
+        flat_w += [w, b]
+
+    return pl.pallas_call(
+        _packed_qnet_stacked_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, row_block), lambda wi, i: (wi, i)),
+        out_shape=jax.ShapeDtypeStruct((n_workers, N), jnp.float32),
+        interpret=interpret,
+    )(bits, frac, *flat_w)

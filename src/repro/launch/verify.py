@@ -116,6 +116,7 @@ def run_scenario(args) -> dict:
         n_workers=args.workers, mols_per_worker=args.mols_per_worker,
         episodes=args.warmup + args.episodes, sync_mode=args.sync,
         rollout=args.rollout, learner=args.learner, chem=args.chem,
+        acting=args.acting,
         updates_per_episode=args.updates_per_episode,
         train_batch_size=args.batch_size, max_candidates=args.max_candidates,
         dqn=DQNConfig(epsilon_decay=args.epsilon_decay),
@@ -174,6 +175,8 @@ def main() -> None:
     ap.add_argument("--rollout", default="fleet_sharded")
     ap.add_argument("--learner", default="packed")
     ap.add_argument("--chem", default="incremental")
+    ap.add_argument("--acting", default="packed",
+                    help="fleet acting representation (core.ACTING_MODES)")
     ap.add_argument("--sync", default="episode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--warmup", type=int, default=1,
@@ -194,7 +197,8 @@ def main() -> None:
     out = run_scenario(args)
     np.savez(args.out, **out)
     print(f"[verify] nd={args.nd} W={args.workers} rollout={args.rollout} "
-          f"learner={args.learner} chem={args.chem} sync={args.sync}: "
+          f"learner={args.learner} chem={args.chem} acting={args.acting} "
+          f"sync={args.sync}: "
           f"{int(out['warmup_compiles'])} warmup compiles, "
           f"{int(out['recompiles_after_warmup'])} recompiles after warmup, "
           f"{int(out['n_transitions'].sum())} transitions -> {args.out}",

@@ -7,8 +7,9 @@ dead worker slots.
 
 Each cell spawns one ``repro.launch.verify`` subprocess per mesh size (the
 XLA_FLAGS-before-jax-init constraint; see mdhelpers).  The four cells cover
-every rollout mode, every learner mode, both chem modes and both sync modes
-at least once; the in-process tier-1 matrices (tests/test_rollout.py,
+every rollout mode, every learner mode, both chem modes, both sync modes
+and every acting representation (packed / packed_async / dense) at least
+once; the in-process tier-1 matrices (tests/test_rollout.py,
 tests/test_learner.py) already pin all mode pairs against each other at
 nd = 1, so cross-mode x cross-nd coverage composes.
 """
@@ -17,21 +18,25 @@ import pytest
 
 from mdhelpers import assert_equivalent, run_cells
 
-# every rollout mode, learner mode, chem mode and sync mode appears >= once
+# every rollout mode, learner mode, chem mode, sync mode AND acting
+# representation (packed / packed_async / dense) appears >= once
 CELLS = (
     dict(rollout="fleet_sharded", learner="packed", chem="incremental",
-         sync="episode"),
+         sync="episode", acting="packed"),
     dict(rollout="fleet_pipelined", learner="packed_pipelined",
-         chem="incremental", sync="step"),
-    dict(rollout="fleet", learner="dense", chem="full", sync="episode"),
-    dict(rollout="per_worker", learner="dense", chem="full", sync="step"),
+         chem="incremental", sync="step", acting="packed_async"),
+    dict(rollout="fleet", learner="dense", chem="full", sync="episode",
+         acting="dense"),
+    dict(rollout="per_worker", learner="dense", chem="full", sync="step",
+         acting="dense"),
 )
 _GATED = ("fleet", "fleet_sharded", "fleet_pipelined")  # recompile-gated modes
 
 
 @pytest.mark.parametrize(
     "cell", CELLS,
-    ids=lambda c: f"{c['rollout']}-{c['learner']}-{c['chem']}-{c['sync']}")
+    ids=lambda c: (f"{c['rollout']}-{c['learner']}-{c['chem']}-"
+                   f"{c['acting']}-{c['sync']}"))
 def test_matrix_cell_identical_across_nd(tmp_path, cell):
     res = run_cells(tmp_path, (1, 2, 4), **cell)
     assert int(res[1]["warmup_compiles"]) > 0   # the counter observes children

@@ -185,6 +185,74 @@ def test_packed_qnet_xla_fallback_matches_dense():
     np.testing.assert_allclose(np.asarray(q), np.asarray(ref), atol=1e-6, rtol=1e-6)
 
 
+def _stacked_packed_inputs(n_workers, c, seed=0):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 256, size=(n_workers, c, 256), dtype=np.uint8)
+    frac = rng.random((n_workers, c)).astype(np.float32)
+    dense = np.concatenate(
+        [np.unpackbits(bits, axis=-1).astype(np.float32), frac[..., None]],
+        axis=-1)
+    return jnp.asarray(bits), jnp.asarray(frac), jnp.asarray(dense)
+
+
+@pytest.mark.parametrize("n_workers,c", [(1, 128), (4, 64), (8, 37)])
+def test_packed_qnet_stacked_interpret_matches_apply_stacked(n_workers, c):
+    """The fleet-acting shape [W, C, 256] (ragged C pads inside the op):
+    Pallas stacked bit-plane kernel (interpret mode) vs the dense
+    apply_stacked under per-worker parameters, <= 1e-5."""
+    from repro.kernels.packed_qnet.ops import packed_qnet_stacked
+
+    net = QNetwork()
+    keys = jax.random.split(jax.random.PRNGKey(7), n_workers)
+    params = jax.vmap(net.init)(keys)
+    bits, frac, dense = _stacked_packed_inputs(n_workers, c, seed=n_workers)
+    q = packed_qnet_stacked(params, bits, frac, impl="pallas", interpret=True)
+    ref = net.apply_stacked(params, dense)
+    assert q.shape == (n_workers, c)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_packed_qnet_stacked_xla_matches_apply_stacked_packed():
+    """Portable path: the kernel module's vmapped unpack-in-jit fallback
+    and QNetwork.apply_stacked_packed are BOTH bit-identical to the dense
+    apply_stacked — the equality the packed acting equivalence rests on."""
+    from repro.kernels.packed_qnet.ops import packed_qnet_stacked
+
+    net = QNetwork()
+    params = jax.vmap(net.init)(jax.random.split(jax.random.PRNGKey(9), 4))
+    bits, frac, dense = _stacked_packed_inputs(4, 33, seed=11)
+    ref = np.asarray(net.apply_stacked(params, dense))
+    np.testing.assert_array_equal(
+        np.asarray(packed_qnet_stacked(params, bits, frac, impl="xla")), ref)
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(net.apply_stacked_packed)(params, bits, frac)), ref)
+
+
+def test_packed_qnet_stacked_dead_worker_rows():
+    """Dead/padded fleet rows (all-zero planes, as the trainer's packed
+    view guarantees) must evaluate exactly like explicit zero input — and
+    must not perturb the live workers' Q values."""
+    from repro.kernels.packed_qnet.ops import packed_qnet_stacked
+
+    net = QNetwork()
+    params = jax.vmap(net.init)(jax.random.split(jax.random.PRNGKey(13), 3))
+    bits, frac, dense = _stacked_packed_inputs(3, 64, seed=17)
+    bits = bits.at[1].set(0)                        # worker 1 is dead
+    frac = frac.at[1].set(0.0)
+    dense = dense.at[1].set(0.0)
+    q = packed_qnet_stacked(params, bits, frac, impl="pallas", interpret=True)
+    ref = net.apply_stacked(params, dense)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # live workers match their single-worker row-kernel evaluation exactly:
+    # a dead row in the batch changes nothing outside its own row
+    for w in (0, 2):
+        pw = jax.tree_util.tree_map(lambda x, w=w: x[w], params)
+        solo = packed_qnet(pw, bits[w], frac[w], impl="pallas", interpret=True)
+        np.testing.assert_array_equal(np.asarray(q[w]), np.asarray(solo))
+
+
 def test_pack_w1_bit_plane_layout():
     """w1r[k, i] must hold W1 row 8*i + k — the row bit k of byte i selects
     under np.unpackbits (MSB-first) ordering."""

@@ -47,11 +47,12 @@ def _transitions(buf: ReplayBuffer):
 # the equivalence matrix: every rollout mode == sequential reference
 # ------------------------------------------------------------------ #
 def _matrix_trainer(rollout: str, sync_mode: str, W: int, seed: int,
-                    chem: str = "full") -> DistributedTrainer:
+                    chem: str = "full", acting: str = "packed"
+                    ) -> DistributedTrainer:
     cfg = TrainerConfig(
         n_workers=W, mols_per_worker=1, episodes=2, sync_mode=sync_mode,
-        rollout=rollout, chem=chem, updates_per_episode=1, train_batch_size=3,
-        max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
+        rollout=rollout, chem=chem, acting=acting, updates_per_episode=1,
+        train_batch_size=3, max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
         env=EnvConfig(max_steps=3), seed=seed)
     mols = (MOLS * ((W + len(MOLS) - 1) // len(MOLS)))[:W]
     return DistributedTrainer(cfg, mols, _OracleService(), RewardConfig(),
@@ -102,6 +103,65 @@ if HAVE_HYPOTHESIS:
 else:
     def test_rollout_mode_matrix_property():
         pytest.importorskip("hypothesis")
+
+
+# ------------------------------------------------------------------ #
+# acting representation matrix: packed / packed_async == dense reference
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("sync_mode", ["episode", "step"])
+def test_acting_mode_matrix(sync_mode):
+    """Every (fleet rollout x acting representation) cell must reproduce
+    the sequential dense reference bit for bit: the packed u8 planes and
+    the async dispatch / pre-drawn selection change the transport and the
+    overlap, never the actions, transitions or parameters.  (The main
+    rollout matrix above already pins acting="packed" — the trainer
+    default — against the dense per_worker reference; this one adds the
+    explicit dense and packed_async fleet cells.)"""
+    from repro.core import ACTING_MODES
+
+    def run(rollout, acting):
+        tr = _matrix_trainer(rollout, sync_mode, 4, seed=3,
+                             chem="incremental", acting=acting)
+        stats = [tr.train_episode() for _ in range(2)]
+        return ([_transitions(b) for b in tr.buffers],
+                [np.asarray(x) for x in jax.tree_util.tree_leaves(tr.params)],
+                [s["loss"] for s in stats])
+
+    ref_streams, ref_params, ref_losses = run("per_worker", "dense")
+    for rollout in ("fleet", "fleet_sharded", "fleet_pipelined"):
+        for acting in ACTING_MODES:
+            streams, params, losses = run(rollout, acting)
+            cell = f"{rollout}/{acting} ({sync_mode})"
+            assert streams == ref_streams, f"{cell}: transition streams diverged"
+            assert losses == pytest.approx(ref_losses, nan_ok=True), \
+                f"{cell}: loss trajectory diverged"
+            for xm, xr in zip(params, ref_params):
+                np.testing.assert_array_equal(xm, xr,
+                                              err_msg=f"{cell}: params diverged")
+
+
+def test_packed_view_dead_rows_stay_zero():
+    """Ragged/finished slots contribute all-zero rows to the sticky packed
+    acting buffer: stale bytes from an earlier (larger) step must never
+    reach the Q evaluation as garbage bit planes."""
+    from repro.core.replay import FP_BYTES
+
+    tr = _trainer("episode", "fleet")               # acting defaults to packed
+    view = tr._fleet_policy
+    assert view.wants_packed_states
+    view.reserve(8)
+    view._bits[:] = 0xFF                            # poison: stale planes
+    view._frac[:] = 7.0
+    rng = np.random.default_rng(0)
+    bits0 = rng.integers(0, 256, (3, FP_BYTES), dtype=np.uint8)
+    frac0 = rng.random(3).astype(np.float32)
+    q = view.fleet_q_values_packed(                 # worker 1 is dead: 0 rows
+        [bits0, np.zeros((0, FP_BYTES), np.uint8)],
+        [frac0, np.zeros((0,), np.float32)])
+    assert q[0].shape == (3,) and q[1].shape == (0,)
+    np.testing.assert_array_equal(view._bits[0, :3], bits0)
+    assert not view._bits[0, 3:].any() and not view._frac[0, 3:].any()
+    assert not view._bits[1].any() and not view._frac[1].any()
 
 
 # ------------------------------------------------------------------ #
@@ -189,12 +249,16 @@ def test_ragged_fleet_keeps_dense_shape_on_fleet_path():
     engine = tr.engine
     engine.reset()
     engine.step(tr._fleet_policy, tr.service, tr.reward_cfg, tr.buffers)
-    n_shapes = jit_cache_size(tr._fleet_q)
+    # whichever fleet jit the configured acting mode dispatches through
+    # (packed by default), its shape set must not grow when workers die
+    fleet_jits = (tr._fleet_q, tr._fleet_q_packed)
+    n_shapes = tuple(jit_cache_size(f) for f in fleet_jits)
+    assert sum(n_shapes) > 0                        # one of them actually ran
     for s in engine.workers[0]:                     # worker 0 finishes early
         s.steps_left = 0
     while not engine.done:
         engine.step(tr._fleet_policy, tr.service, tr.reward_cfg, tr.buffers)
-    assert jit_cache_size(tr._fleet_q) == n_shapes
+    assert tuple(jit_cache_size(f) for f in fleet_jits) == n_shapes
 
 
 def test_zero_candidate_slots_die_cleanly(monkeypatch):
