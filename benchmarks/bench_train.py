@@ -110,11 +110,13 @@ def _time(fn, reps: int) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _trainer(W: int, B: int, C: int, learner: str) -> DistributedTrainer:
+def _trainer(W: int, B: int, C: int, learner: str,
+             replay: str = "uniform") -> DistributedTrainer:
     cfg = TrainerConfig(
         n_workers=W, mols_per_worker=1, episodes=1, sync_mode="episode",
         learner=learner, train_batch_size=B, max_candidates=C,
-        replay_capacity=FILL, dqn=DQNConfig(), env=EnvConfig(max_steps=3), seed=0)
+        replay_capacity=FILL, replay=replay,
+        dqn=DQNConfig(), env=EnvConfig(max_steps=3), seed=0)
     net = QNetwork(hidden=(64,) if W >= 512 else (128, 32))
     tr = DistributedTrainer(cfg, [from_smiles("C1=CC=CC=C1O")] * W,
                             _NullService(), RewardConfig(), network=net)
@@ -236,20 +238,117 @@ def smoke(W: int = 8) -> None:
     emit(f"train.smoke.w{W}.update_shapes",
          jit_cache_size(tr._local_update_packed), "shapes", "gate: must be 1")
 
+    # prioritized-replay cell: the same shape-discipline bar with PER on.
+    # The measured window sweeps the beta anneal (beta is batch VALUES, not
+    # a traced shape) and runs priority feedback after every update (so the
+    # weighted-draw branch is exercised, not just the flat fast path) —
+    # gate: 0 recompiles after the weighted update's own warmup, and still
+    # exactly ONE compiled train-step shape.
+    trp = _trainer(W, B, C, "packed_pipelined", replay="prioritized")
+    trp.run_updates(2)                       # warmup: traces the weighted step
+    mark = counter.count
+    for ep in (0, 3, 9):                     # distinct betas along the anneal
+        trp.episode = ep
+        trp.run_updates(2)
+    prio_recompiles = counter.delta_since(mark)
+    prio_shapes = jit_cache_size(trp._local_update_packed)
+    emit(f"train.smoke.w{W}.prioritized_recompiles_after_warmup",
+         prio_recompiles, "compiles", "gate: must be 0 (beta sweep included)")
+    emit(f"train.smoke.w{W}.prioritized_update_shapes", prio_shapes,
+         "shapes", "gate: must be 1")
+
     if m["recompiles"] != 0:
         raise SystemExit(
             f"FAIL: {m['recompiles']} XLA compile(s) during measured updates "
             f"(train-step shape discipline broken)")
     if jit_cache_size(tr._local_update_packed) != 1:
         raise SystemExit("FAIL: packed train step traced more than one shape")
+    if prio_recompiles != 0:
+        raise SystemExit(
+            f"FAIL: {prio_recompiles} XLA compile(s) during prioritized "
+            f"updates (the beta anneal must not retrace)")
+    if prio_shapes != 1:
+        raise SystemExit("FAIL: prioritized train step traced more than one shape")
     if ratio < 30:
         raise SystemExit(f"FAIL: H2D reduction {ratio:.1f}x < 30x")
     if host_speedup < 3:
         raise SystemExit(
             f"FAIL: host-sample speedup {host_speedup:.1f}x < 3x vs seed list buffer")
     print(f"SMOKE PASS: W={W} on {jax.device_count()} device(s), "
-          f"0 recompiles after warmup, 1 train-step shape, "
+          f"0 recompiles after warmup (uniform AND prioritized), "
+          f"1 train-step shape, "
           f"{ratio:.1f}x H2D reduction, {host_speedup:.1f}x host-sample speedup")
+
+
+# ------------------------------------------------------------------ #
+# multi-start end-to-end cell (the paper-scale generalist loop)
+# ------------------------------------------------------------------ #
+MULTISTART_SMILES = (
+    "C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O",
+    "CC1=CC=C(O)C=C1", "COC1=CC=CC=C1O", "CC(C)C1=CC=CC=C1O", "NC1=CC=CC=C1O",
+    "CC1=C(O)C(C)=CC=C1", "OC1=CC=C(O)C=C1", "CCC1=CC=CC=C1O", "CC1=CC(O)=CC=C1",
+)
+
+
+def multistart(W: int = 512, episodes: int = 2) -> dict:
+    """End-to-end multi-start training cell at fleet scale: every episode
+    draws fresh start molecules from a seeded DatasetStream cursor (here an
+    inline phenol pool, so the bench measures the streaming machinery, not
+    molecule generation), acting packed + pipelined, prioritized packed
+    learner with per-update |TD| priority feedback.  Reports steps/s,
+    updates, start-schedule coverage and the recompile count over the
+    measured episodes."""
+    import jax
+
+    from repro.core.jit_stats import RecompileCounter
+    from repro.predictors.service import OracleService
+
+    counter = RecompileCounter.install()
+    pool = [from_smiles(s) for s in MULTISTART_SMILES]
+    cfg = TrainerConfig(
+        n_workers=W, mols_per_worker=1, episodes=episodes + 2,
+        sync_mode="episode", rollout="fleet_pipelined", learner="packed",
+        acting="packed", chem="incremental", replay="prioritized",
+        updates_per_episode=2, train_batch_size=4, max_candidates=8,
+        replay_capacity=256, dataset="inline",
+        dqn=DQNConfig(epsilon_decay=0.97), env=EnvConfig(max_steps=2), seed=0)
+    tr = DistributedTrainer(cfg, None, OracleService(), RewardConfig(),
+                            network=QNetwork(hidden=(64,)), dataset_pool=pool)
+
+    # two warmup episodes: the first compiles acting, the second reaches
+    # min-fill and compiles the (weighted) update; then candidate headroom
+    for _ in range(2):
+        tr.train_episode()
+    if tr.candidate_capacity:
+        tr.reserve_candidates(int(tr.candidate_capacity * 1.3))
+
+    mark = counter.count
+    steps0, updates0 = tr.engine.n_env_steps, tr.n_updates
+    t0 = time.perf_counter()
+    for _ in range(episodes):
+        tr.train_episode()
+    wall = time.perf_counter() - t0
+    steps = tr.engine.n_env_steps - steps0
+    updates = tr.n_updates - updates0
+    unique = len({k for ep in tr.start_log for k in ep})
+    out = {
+        "steps_per_s": steps / wall,
+        "updates": updates,
+        "episode_wall_s": wall / episodes,
+        "unique_starts": unique,
+        "episodes_streamed": len(tr.start_log),
+        "recompiles_after_warmup": counter.delta_since(mark),
+    }
+    emit(f"train.multistart.w{W}.steps_per_s", round(out["steps_per_s"], 2),
+         "steps/s", f"end-to-end fleet env steps, {episodes} measured episodes")
+    emit(f"train.multistart.w{W}.episode_wall_s",
+         round(out["episode_wall_s"], 2), "s",
+         "rollout + prioritized updates + episode param sync")
+    emit(f"train.multistart.w{W}.unique_starts", unique, "molecules",
+         f"start-schedule coverage of the {len(pool)}-molecule pool")
+    emit(f"train.multistart.w{W}.recompiles_after_warmup",
+         out["recompiles_after_warmup"], "compiles", "target: 0")
+    return out
 
 
 if __name__ == "__main__":
@@ -258,10 +357,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: W=8 packed_pipelined learner")
+    ap.add_argument("--multistart", action="store_true",
+                    help="W=512 multi-start end-to-end cell (dataset "
+                         "streaming + prioritized replay)")
     ap.add_argument("--w", type=int, default=8, help="smoke worker count")
     ap.add_argument("--scale", choices=("quick", "full"), default="quick")
     args = ap.parse_args()
     if args.smoke:
         smoke(args.w)
+    elif args.multistart:
+        multistart(args.w if args.w != 8 else 512)
     else:
         run(args.scale)

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run                 # everything, quick
     PYTHONPATH=src python -m benchmarks.run --only env,cache
     PYTHONPATH=src python -m benchmarks.run --scale full
-    PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_PR6.json
+    PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_PR7.json
+    PYTHONPATH=src python -m benchmarks.run --trajectory    # diff the series
 
 Prints ``name,value,unit[,derived]`` CSV; writes experiments/bench/results.json.
 
@@ -17,6 +18,7 @@ that lets successive PRs be compared on one box.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
@@ -29,7 +31,10 @@ BENCHES = ("env", "fingerprint", "cache", "rollout", "train", "models",
 def bench_json(path: str) -> None:
     """Write the perf-trajectory snapshot (see module docstring): smoke
     benches only — training-free, minutes not hours — plus the measured
-    W=512 dense-vs-packed acting H2D cell."""
+    W=512 dense-vs-packed acting H2D cell and the W=512 multi-start
+    end-to-end training cell (dataset streaming + prioritized replay).
+    Finishes by printing the per-metric delta table of the whole committed
+    BENCH_*.json series, this snapshot included."""
     import json
     import platform
 
@@ -41,6 +46,7 @@ def bench_json(path: str) -> None:
     bench_train.smoke(8)
     bench_env.smoke(16)
     h2d = bench_rollout.measure_acting_h2d(512)
+    ms = bench_train.multistart(512)
 
     def val(key):
         return RESULTS[key]["value"] if key in RESULTS else None
@@ -62,6 +68,11 @@ def bench_json(path: str) -> None:
             "acting_h2d_reduction_w512": round(h2d["reduction"], 1),
             "learner_h2d_reduction_w8": val("train.smoke.w8.h2d_reduction"),
             "chem_cache_hit_rate_w16": val("env.smoke.w16.cache_hit_rate"),
+            "multistart_steps_per_s_w512": round(ms["steps_per_s"], 2),
+            "multistart_episode_wall_s_w512": round(ms["episode_wall_s"], 2),
+            "multistart_unique_starts_w512": int(ms["unique_starts"]),
+            "prioritized_recompiles_after_warmup":
+                val("train.smoke.w8.prioritized_recompiles_after_warmup"),
             "recompiles_after_warmup": max(
                 int(v["value"]) for k, v in RESULTS.items()
                 if k.endswith("recompiles_after_warmup")),
@@ -72,6 +83,41 @@ def bench_json(path: str) -> None:
         json.dump(snapshot, f, indent=2, default=str)
         f.write("\n")
     print(f"\n[bench-json] wrote {path}")
+    print_trajectory(os.path.dirname(os.path.abspath(path)) or ".")
+
+
+def print_trajectory(root: str = ".") -> None:
+    """Load the committed BENCH_*.json series and print the per-metric
+    delta table between consecutive snapshots (the diffable perf
+    trajectory).  Fails loudly — malformed snapshots raise, an empty
+    series exits nonzero."""
+    from benchmarks.common import diff_bench_trajectory, load_bench_trajectory
+
+    snaps = load_bench_trajectory(root)
+    if not snaps:
+        raise SystemExit(
+            f"no BENCH_*.json snapshots under {root!r} — run "
+            f"`benchmarks/run.py --bench-json BENCH_PR<n>.json` first")
+    names = ", ".join(s["name"] for s in snaps)
+    print(f"\n[trajectory] {len(snaps)} snapshot(s): {names}")
+    rows = diff_bench_trajectory(snaps)
+    if not rows:
+        print("[trajectory] single snapshot — nothing to diff yet")
+        return
+    width = max(len(r["metric"]) for r in rows)
+    last_pair = None
+    for r in rows:
+        pair = (r["from"], r["to"])
+        if pair != last_pair:
+            print(f"\n  {pair[0]} -> {pair[1]}")
+            last_pair = pair
+        if r["delta_pct"] is None:
+            change = "new" if r["old"] is None else \
+                ("dropped" if r["new"] is None else "--")
+        else:
+            change = f"{r['delta_pct']:+8.1f}%"
+        print(f"    {r['metric']:<{width}}  {r['old']!s:>12} -> "
+              f"{r['new']!s:>12}  {change}")
 
 
 def main() -> None:
@@ -80,9 +126,16 @@ def main() -> None:
     ap.add_argument("--scale", choices=("quick", "full"), default="quick")
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="write the perf-trajectory snapshot to PATH and exit "
-                         "(smoke benches + measured W=512 acting bytes)")
+                         "(smoke benches + measured W=512 acting bytes + the "
+                         "W=512 multi-start training cell)")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="print the committed BENCH_*.json series as a "
+                         "per-metric delta table and exit (no benches run)")
     args = ap.parse_args()
 
+    if args.trajectory:
+        print_trajectory(".")
+        return
     if args.bench_json:
         bench_json(args.bench_json)
         return

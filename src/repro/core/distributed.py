@@ -122,6 +122,15 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool | None = None):
 ROLLOUT_MODES = ("fleet", "fleet_sharded", "fleet_pipelined", "per_worker")
 _FLEET_MODES = ("fleet", "fleet_sharded", "fleet_pipelined")
 LEARNER_MODES = ("packed", "packed_pipelined", "dense")
+# replay sampling (core.replay.SAMPLING_MODES): "uniform" is the seed path
+# and the pinned reference; "prioritized" is proportional PER (Schaul et
+# al. 2015) with per-slot priority arrays in the SoA buffers, importance
+# weights folded into the loss, and |TD| feedback after every update.
+# With all-equal effective priorities (priority_alpha = 0, or before any
+# TD feedback differentiates them) prioritized is BIT-identical to
+# uniform — same RNG stream, unit weights (tests/test_learner.py,
+# tests/multidevice).
+REPLAY_MODES = ("uniform", "prioritized")
 # fleet acting-batch representation (the learner refactor's acting twin),
 # all pinned transition/param-identical by tests/test_rollout.py:
 #   "packed"        u8 bit planes assembled straight from the slots'
@@ -153,6 +162,18 @@ class TrainerConfig:
     train_batch_size: int = 32        # <= Table 2's 512 cap; CPU-scaled
     max_candidates: int = 64          # replay target max truncation
     replay_capacity: int = 4000       # Table 3
+    replay: str = "uniform"           # replay sampling: see REPLAY_MODES
+    priority_alpha: float = 0.6       # PER proportional exponent (0 = flat)
+    priority_beta0: float = 0.4       # importance-weight anneal start
+    priority_beta_episodes: int | None = None  # episodes for beta -> 1.0
+                                               # (None: cfg.episodes)
+    priority_eps: float = 1e-3        # |TD| priority floor
+    dataset: str | None = None        # multi-start episode stream: draw each
+                                      # episode's start molecules from a
+                                      # seeded data.datasets cursor (DATASETS
+                                      # name); None = fixed ctor molecules
+    dataset_size: int | None = None   # pool size (None: dataset default)
+    dataset_seed: int | None = None   # pool+cursor seed (None: cfg.seed)
     pipeline_threads: int | None = None  # fleet_pipelined host pool (None: auto)
     dqn: DQNConfig = field(default_factory=lambda: DQNConfig(epsilon_decay=0.97))
     env: EnvConfig = field(default_factory=EnvConfig)
@@ -327,11 +348,12 @@ class DistributedTrainer:
     def __init__(
         self,
         cfg: TrainerConfig,
-        molecules: list[Molecule],
+        molecules: list[Molecule] | None,
         service: PropertyService,
         reward_cfg: RewardConfig,
         mesh: Mesh | None = None,
         network: QNetwork | None = None,
+        dataset_pool: list[Molecule] | None = None,
     ):
         self.cfg = cfg
         self.service = service
@@ -339,9 +361,36 @@ class DistributedTrainer:
         self.network = network or QNetwork()
         W = cfg.n_workers
         need = W * cfg.mols_per_worker
+
+        # multi-start dataset streaming (ROADMAP item 5): with cfg.dataset
+        # set, every episode draws its start molecules from a seeded
+        # DatasetStream cursor instead of re-using the fixed ctor batch.
+        # ``dataset_pool`` lets callers (tests, benches) inject the pool
+        # directly; otherwise cfg.dataset names a data.datasets registry
+        # entry.  The cursor is drawn ON THE HOST before any rollout-mode
+        # branch, so the start schedule is identical across fleet /
+        # fleet_sharded / fleet_pipelined / per_worker (tests/test_datasets).
+        self._dataset_stream = None
+        if cfg.dataset is not None:
+            if molecules is not None:
+                raise ValueError(
+                    "pass molecules=None when cfg.dataset streams the "
+                    "episode starts (the fixed batch would be ignored)")
+            from repro.data.datasets import DatasetStream, load_dataset
+            pool = dataset_pool if dataset_pool is not None else load_dataset(
+                cfg.dataset, count=cfg.dataset_size, seed=cfg.dataset_seed)
+            dseed = cfg.seed if cfg.dataset_seed is None else cfg.dataset_seed
+            self._dataset_stream = DatasetStream(pool, seed=dseed)
+            # episode-0 placeholder assignment (rollout_episode re-draws
+            # from the cursor before every episode, including the first)
+            molecules = [pool[i % len(pool)] for i in range(need)]
+        elif molecules is None:
+            raise ValueError("molecules=None requires cfg.dataset")
         if len(molecules) < need:
             raise ValueError(f"need {need} molecules for {W}x{cfg.mols_per_worker}, got {len(molecules)}")
         self.molecules = molecules[:need]
+        self.start_log: list[tuple[str, ...]] = []  # per-episode start keys
+                                                    # (dataset mode only)
 
         if mesh is None:
             mesh = make_host_mesh()   # the one mesh-construction code path
@@ -366,6 +415,8 @@ class DistributedTrainer:
             raise ValueError(f"chem must be one of {CHEM_MODES}, got {cfg.chem!r}")
         if cfg.acting not in ACTING_MODES:
             raise ValueError(f"acting must be one of {ACTING_MODES}, got {cfg.acting!r}")
+        if cfg.replay not in REPLAY_MODES:
+            raise ValueError(f"replay must be one of {REPLAY_MODES}, got {cfg.replay!r}")
 
         # size the predictor padding ladder for the fleet-wide per-step batch
         # (one chosen successor per live slot)
@@ -389,7 +440,10 @@ class DistributedTrainer:
         # storage truncates where sample() would anyway (cfg.max_candidates),
         # so the SoA candidate axis never outgrows what training can see
         self.buffers = [ReplayBuffer(cfg.replay_capacity, seed=cfg.seed + 200 + w,
-                                     max_candidates=cfg.max_candidates)
+                                     max_candidates=cfg.max_candidates,
+                                     sampling=cfg.replay,
+                                     priority_alpha=cfg.priority_alpha,
+                                     priority_eps=cfg.priority_eps)
                         for w in range(W)]
         self._worker_rngs = [np.random.default_rng(cfg.seed + 300 + w) for w in range(W)]
         self.n_q_dispatches = 0  # acting-side jit dispatches (both paths)
@@ -450,6 +504,11 @@ class DistributedTrainer:
         mesh = self.mesh
 
         def per_worker_loss(p, tp, batch):
+            # Returns (loss, |td|): the aux |TD| vector feeds prioritized
+            # replay's priority refresh.  Adding the stop_gradient'd aux
+            # leaves loss and grads bitwise unchanged, and uniform batches
+            # carry no "weights" key, so the uniform jits trace EXACTLY
+            # the seed loss — both properties the parity tests pin.
             q_sa = net.apply(p, batch["states"])
             q_next_online = net.apply(p, batch["next_fps"])
             q_next_online = jnp.where(batch["next_mask"] > 0, q_next_online, -jnp.inf)
@@ -459,7 +518,11 @@ class DistributedTrainer:
             v_next = jnp.where(batch["next_mask"].sum(-1) > 0, v_next, 0.0)
             y = jax.lax.stop_gradient(
                 batch["rewards"] + discount * (1.0 - batch["dones"]) * v_next)
-            return jnp.mean(huber(q_sa - y))
+            td = q_sa - y
+            h = huber(td)
+            if "weights" in batch:   # prioritized: importance-weighted mean
+                h = h * batch["weights"]
+            return jnp.mean(h), jax.lax.stop_gradient(jnp.abs(td))
 
         spec_w = P("data")
         n_live = self.n_live_workers
@@ -506,14 +569,15 @@ class DistributedTrainer:
             mask = shard_live_mask()
 
             def one(p, tp, s, b, m):
-                loss, grads = jax.value_and_grad(per_worker_loss)(p, tp, b)
+                (loss, td), grads = jax.value_and_grad(
+                    per_worker_loss, has_aux=True)(p, tp, b)
                 if n_live != W_pad:
                     # dead padding slots must not move: zero their grads
                     # (Adam with zero grads and zero moments is an exact
                     # no-op on the params)
                     grads = jax.tree_util.tree_map(lambda g: g * m, grads)
                 updates, s2 = opt.update(grads, s, p)
-                return apply_updates(p, updates), s2, loss
+                return apply_updates(p, updates), s2, loss, td
             return scan_workers(one, (params, target, opt_state, batch, mask))
 
         def ddp_update_body(params, target, opt_state, batch):
@@ -521,14 +585,16 @@ class DistributedTrainer:
             # mean); every worker — dead padding included — applies the
             # same mean update, so the stacked tree stays replicated
             def gfn(p, tp, b):
-                return jax.value_and_grad(per_worker_loss)(p, tp, b)
-            losses, grads = scan_workers(gfn, (params, target, batch))
+                (loss, td), grads = jax.value_and_grad(
+                    per_worker_loss, has_aux=True)(p, tp, b)
+                return loss, td, grads
+            losses, tds, grads = scan_workers(gfn, (params, target, batch))
             gmean = jax.tree_util.tree_map(fleet_mean, grads)
             def one(p, s):
                 updates, s2 = opt.update(gmean, s, p)
                 return apply_updates(p, updates), s2
             new_p, new_s = scan_workers(one, (params, opt_state))
-            return new_p, new_s, losses
+            return new_p, new_s, losses, tds
 
         def sync_body(tree):
             return jax.tree_util.tree_map(
@@ -554,23 +620,23 @@ class DistributedTrainer:
         self._local_update = jax.jit(shard_map(
             local_update_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
-            out_specs=(spec_w, spec_w, spec_w),
+            out_specs=(spec_w, spec_w, spec_w, spec_w),
         ), out_shardings=out_w)
         self._ddp_update = jax.jit(shard_map(
             ddp_update_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
-            out_specs=(spec_w, spec_w, spec_w),
+            out_specs=(spec_w, spec_w, spec_w, spec_w),
             check_rep=False,
         ), out_shardings=out_w)
         self._local_update_packed = jax.jit(shard_map(
             local_update_packed_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
-            out_specs=(spec_w, spec_w, spec_w),
+            out_specs=(spec_w, spec_w, spec_w, spec_w),
         ), out_shardings=out_w)
         self._ddp_update_packed = jax.jit(shard_map(
             ddp_update_packed_body, mesh=mesh,
             in_specs=(spec_w, spec_w, spec_w, spec_w),
-            out_specs=(spec_w, spec_w, spec_w),
+            out_specs=(spec_w, spec_w, spec_w, spec_w),
             check_rep=False,
         ), out_shardings=out_w)
         self._sync = jax.jit(shard_map(
@@ -663,6 +729,12 @@ class DistributedTrainer:
         they produce identical transitions (tests/test_rollout.py).
         """
         W = self.cfg.n_workers
+        if self._dataset_stream is not None:
+            # multi-start: the next cursor draw becomes this episode's
+            # start assignment, BEFORE the rollout-mode branch — one host
+            # cursor, so every mode sees the identical schedule
+            self._assign_starts(
+                self._dataset_stream.draw(W * self.cfg.mols_per_worker))
         if self.cfg.rollout in _FLEET_MODES:
             flat = self.engine.run_episode(
                 self._active_fleet_view, self.service, self.reward_cfg,
@@ -679,6 +751,21 @@ class DistributedTrainer:
                 r.worker = w
             records.append(recs)
         return records
+
+    def _assign_starts(self, molecules: list[Molecule]) -> None:
+        """Install one episode's start molecules everywhere acting reads
+        them: the worker-major partition goes into the fleet engine's live
+        worker initials (``run_episode`` resets into them) and the legacy
+        per-worker envs are dropped for lazy rebuild from ``self.molecules``.
+        The schedule is appended to ``start_log`` so cross-mode determinism
+        is directly testable."""
+        cfg = self.cfg
+        self.molecules = list(molecules)
+        self.engine.set_initial_molecules(
+            [self.molecules[w * cfg.mols_per_worker : (w + 1) * cfg.mols_per_worker]
+             for w in range(cfg.n_workers)])
+        self._envs = None
+        self.start_log.append(tuple(m.iso_key() for m in self.molecules))
 
     @property
     def _active_fleet_view(self) -> _FleetView:
@@ -748,11 +835,30 @@ class DistributedTrainer:
             per = per + [zero] * (self.n_padded_workers - self.n_live_workers)
         return {k: np.stack([p[k] for p in per]) for k in per[0]}
 
+    def _beta(self) -> float:
+        """PER importance-weight exponent, annealed ``priority_beta0 -> 1``
+        over ``priority_beta_episodes`` (default: the full run).  A pure
+        host float shipped as array VALUES inside the batch — the schedule
+        never enters a traced shape, so sweeping beta costs zero
+        recompiles (gated by bench_train --smoke)."""
+        cfg = self.cfg
+        horizon = cfg.priority_beta_episodes or cfg.episodes
+        frac = min(1.0, self.episode / max(1, horizon))
+        return cfg.priority_beta0 + (1.0 - cfg.priority_beta0) * frac
+
+    def _sample_kwargs(self) -> dict:
+        """Per-draw keyword args: prioritized adds the annealed beta;
+        uniform passes NOTHING so the reference call sites stay verbatim."""
+        if self.cfg.replay == "prioritized":
+            return {"beta": self._beta()}
+        return {}
+
     def _stacked_sample_np(self) -> dict[str, np.ndarray]:
         """Seed path host work: one DENSE float32 sample per worker buffer,
         stacked to ``[W_pad, B, ...]`` (what `_stacked_sample` ships)."""
+        kw = self._sample_kwargs()
         return self._pad_stacked(
-            [b.sample(self.cfg.train_batch_size, self.cfg.max_candidates)
+            [b.sample(self.cfg.train_batch_size, self.cfg.max_candidates, **kw)
              for b in self.buffers])
 
     def _stacked_sample_packed_np(self) -> dict[str, np.ndarray]:
@@ -761,8 +867,10 @@ class DistributedTrainer:
         and no host-side unpack at all.  Draws the SAME per-buffer seeded
         indices as the dense sampler, which is what makes the two learner
         paths loss-trajectory-identical (tests/test_learner.py)."""
+        kw = self._sample_kwargs()
         return self._pad_stacked(
-            [b.sample_packed(self.cfg.train_batch_size, self.cfg.max_candidates)
+            [b.sample_packed(self.cfg.train_batch_size, self.cfg.max_candidates,
+                             **kw)
              for b in self.buffers])
 
     def _ship(self, host_batch: dict[str, np.ndarray]) -> dict[str, jnp.ndarray]:
@@ -777,15 +885,25 @@ class DistributedTrainer:
 
     def _update_once(self, batch: dict[str, jnp.ndarray], packed: bool):
         """One optimiser step under the configured sync mode; returns the
-        per-worker loss vector still on device (don't block the pipeline)."""
+        per-worker ``(loss, |td|)`` pair still on device (don't block the
+        pipeline — prioritized replay is the only consumer of the td)."""
         if self.cfg.sync_mode == "step":
             fn = self._ddp_update_packed if packed else self._ddp_update
         else:
             fn = self._local_update_packed if packed else self._local_update
-        self.params, self.opt_state, loss = fn(
+        self.params, self.opt_state, loss, td = fn(
             self.params, self.target_params, self.opt_state, batch)
         self.n_updates += 1
-        return loss
+        return loss, td
+
+    def _apply_priorities(self, td) -> None:
+        """Feed the update's ``[W_pad, B]`` |TD| errors back into the live
+        workers' buffers (dead mesh-padding rows carry zero-batch garbage
+        and are dropped) — the sample -> update -> reprioritise cycle of
+        proportional PER."""
+        td_host = np.asarray(td)
+        for w, buf in enumerate(self.buffers):
+            buf.update_priorities(td_host[w])
 
     def _loss_scalar(self, loss) -> float:
         """Scalar loss over the LIVE workers of a ``[W_pad]`` loss vector
@@ -806,19 +924,30 @@ class DistributedTrainer:
         thread gathers update k+1's packed batch while update k runs on
         device (sound because nothing writes the buffers between updates
         and the single sampler thread drains each buffer's RNG stream in
-        order — so every path sees identical batches)."""
+        order — so every path sees identical batches).
+
+        Prioritized replay forces the SEQUENTIAL order for every learner
+        mode, packed_pipelined included: update k's |TD| errors must
+        reprioritise the buffers before batch k+1 is drawn, so there is
+        nothing sound to overlap — pre-sampling would read stale
+        priorities and break the learner-mode equivalence matrix.  (The
+        documented cost of PER's sample/update data dependence.)"""
         if n <= 0:
             return []   # before the eager submit below: a zero-update call
             # must not advance the buffers' sample RNG streams
         mode = self.cfg.learner
-        if mode == "dense":
-            return [self._loss_scalar(self._update_once(self._stacked_sample(),
-                                                        packed=False))
-                    for _ in range(n)]
-        if mode == "packed":
-            return [self._loss_scalar(self._update_once(self._stacked_sample_packed(),
-                                                        packed=True))
-                    for _ in range(n)]
+        prioritized = self.cfg.replay == "prioritized"
+        if mode != "packed_pipelined" or prioritized:
+            packed = mode != "dense"
+            losses = []
+            for _ in range(n):
+                batch = self._stacked_sample_packed() if packed \
+                    else self._stacked_sample()
+                loss, td = self._update_once(batch, packed=packed)
+                if prioritized:
+                    self._apply_priorities(td)
+                losses.append(self._loss_scalar(loss))
+            return losses
         pool = self._get_sampler()
         fut = pool.submit(self._stacked_sample_packed_np)
         device_losses = []
@@ -829,7 +958,7 @@ class DistributedTrainer:
             # the update dispatch is async: XLA computes while the sampler
             # thread gathers; only the final host conversions block
             device_losses.append(
-                self._update_once(self._ship(host_batch), packed=True))
+                self._update_once(self._ship(host_batch), packed=True)[0])
         return [self._loss_scalar(l) for l in device_losses]
 
     def train(self, episodes: int | None = None, log_every: int = 0) -> list[dict]:

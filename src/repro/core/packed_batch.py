@@ -52,9 +52,12 @@ def densify_batch(packed: dict[str, jnp.ndarray]) -> dict[str, jnp.ndarray]:
         [unpack_bits(packed["next_bits"]) * next_mask[..., None],
          (packed["next_frac"][..., None] * next_mask)[..., None]],
         axis=-1)
-    return {"states": states, "rewards": packed["rewards"],
-            "dones": packed["dones"], "next_fps": next_fps,
-            "next_mask": next_mask}
+    out = {"states": states, "rewards": packed["rewards"],
+           "dones": packed["dones"], "next_fps": next_fps,
+           "next_mask": next_mask}
+    if "weights" in packed:          # prioritized replay importance weights
+        out["weights"] = packed["weights"]
+    return out
 
 
 def packed_nbytes(packed: dict) -> int:
@@ -70,7 +73,10 @@ def dense_nbytes_equivalent(packed: dict) -> int:
     rows = 1
     for d in b_shape:
         rows *= d
-    return 4 * (rows * (FP_BITS + 1)          # states
-                + rows + rows                 # rewards, dones
-                + rows * C * (FP_BITS + 1)    # next_fps
-                + rows * C)                   # next_mask
+    n = 4 * (rows * (FP_BITS + 1)             # states
+             + rows + rows                    # rewards, dones
+             + rows * C * (FP_BITS + 1)       # next_fps
+             + rows * C)                      # next_mask
+    if "weights" in packed:                   # prioritized: weights ship in
+        n += 4 * rows                         # both layouts identically
+    return n

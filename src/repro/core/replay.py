@@ -27,6 +27,19 @@ Two implementations share the semantics:
                       seeded ``sample()`` equivalence of the two, and
                       benchmarks/bench_train.py measures the host-sample
                       speedup against it.
+
+``ReplayBuffer`` additionally supports proportional PRIORITIZED sampling
+(``sampling="prioritized"``, Schaul et al. 2015): per-row priority arrays
+ride the same SoA ring storage, the weighted draw is one vectorized
+inverse-CDF ``searchsorted`` over the cumulative priorities, and the batch
+gains a ``weights`` key (importance weights ``(N * P(i))^-beta``, max-
+normalised) the learner folds into the loss.  THE parity invariant: when
+the effective priorities ``p^alpha`` are all equal (``alpha = 0``, or no
+``update_priorities`` call has differentiated them yet), the draw takes the
+EXACT uniform path — the same ``rng.integers`` call the uniform sampler
+makes, unit weights — so a prioritized buffer with flat priorities is
+BIT-identical (indices, batches, RNG stream) to a uniform one.
+``ListReplayBuffer`` + uniform sampling stays the pinned reference.
 """
 
 from __future__ import annotations
@@ -78,26 +91,51 @@ def densify_sample(packed: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
     if C:
         next_fps[..., :FP_BITS] = np.unpackbits(bits, axis=-1) * next_mask[..., None]
     next_fps[..., FP_BITS] = packed["next_frac"][:, None] * next_mask
-    return {"states": states, "rewards": packed["rewards"],
-            "dones": packed["dones"], "next_fps": next_fps,
-            "next_mask": next_mask}
+    out = {"states": states, "rewards": packed["rewards"],
+           "dones": packed["dones"], "next_fps": next_fps,
+           "next_mask": next_mask}
+    if "weights" in packed:          # prioritized replay importance weights
+        out["weights"] = packed["weights"]
+    return out
+
+
+SAMPLING_MODES = ("uniform", "prioritized")
 
 
 class ReplayBuffer:
-    """Uniform-sampling SoA ring buffer (paper Table 3: size 4000).
+    """SoA ring buffer (paper Table 3: size 4000), uniform or prioritized.
 
     ``max_candidates`` bounds the stored successor set per transition
     (``None`` = keep every candidate); the trainer passes its replay
     truncation target so storage never holds rows ``sample`` would drop.
+    Sampling wider than that storage bound raises: the dropped rows may
+    include the taken action's candidate, so a silent zero-padded answer
+    would diverge from the ``ListReplayBuffer`` reference (which stores
+    full rows and truncates only at sample time).
     Row and candidate capacities grow geometrically up to their caps, so
     the arrays a mostly-empty buffer owns stay proportional to what was
     actually added.
+
+    ``sampling="prioritized"`` keeps a per-row priority (new rows get the
+    running max, so every transition is sampled at least once with high
+    probability), draws proportional to ``priority**priority_alpha``, and
+    adds max-normalised importance weights under the ``weights`` key.
+    ``update_priorities(td_abs)`` refreshes the rows of the LAST draw with
+    ``|td| + priority_eps`` (duplicate indices: last write wins).
     """
 
     def __init__(self, capacity: int = 4000, seed: int = 0,
-                 max_candidates: int | None = None):
+                 max_candidates: int | None = None,
+                 sampling: str = "uniform",
+                 priority_alpha: float = 0.6,
+                 priority_eps: float = 1e-3):
+        if sampling not in SAMPLING_MODES:
+            raise ValueError(f"sampling={sampling!r} not in {SAMPLING_MODES}")
         self.capacity = capacity
         self.max_candidates = max_candidates
+        self.sampling = sampling
+        self.priority_alpha = float(priority_alpha)
+        self.priority_eps = float(priority_eps)
         self._rng = np.random.default_rng(seed)
         self._size = 0
         self._pos = 0
@@ -110,6 +148,9 @@ class ReplayBuffer:
         self._next_bits = np.zeros((0, 0, FP_BYTES), np.uint8)
         self._next_frac = np.zeros((0,), np.float32)
         self._next_counts = np.zeros((0,), np.int32)
+        self._priorities = np.zeros((0,), np.float64)
+        self._max_priority = 1.0
+        self._last_idx: np.ndarray | None = None   # indices of the last draw
 
     def __len__(self) -> int:
         return self._size
@@ -130,6 +171,7 @@ class ReplayBuffer:
         self._next_bits = grow(self._next_bits, (rows, self._cand_cap, FP_BYTES))
         self._next_frac = grow(self._next_frac, (rows,))
         self._next_counts = grow(self._next_counts, (rows,))
+        self._priorities = grow(self._priorities, (rows,))
         self._rows = rows
 
     def _grow_candidates(self, need: int) -> None:
@@ -159,6 +201,7 @@ class ReplayBuffer:
         self._next_bits[pos, k:] = 0          # clear the evicted row's tail
         self._next_frac[pos] = t.next_steps_left_frac
         self._next_counts[pos] = k
+        self._priorities[pos] = self._max_priority
         self._size = min(self._size + 1, self.capacity)
         self._pos = (pos + 1) % self.capacity
 
@@ -170,10 +213,71 @@ class ReplayBuffer:
     # ------------------------------------------------------------ #
     # sampling: one seeded index draw + pure fancy-indexing gathers
     # ------------------------------------------------------------ #
+    def _check_candidate_bound(self, C: int) -> None:
+        """Sampling wider than the storage bound cannot be answered
+        honestly: rows past ``self.max_candidates`` (possibly including the
+        taken action's candidate) were dropped at ``add`` time, while the
+        ``ListReplayBuffer`` reference would return them — so fail loudly
+        instead of silently zero-padding a divergent batch."""
+        if self.max_candidates is not None and C > self.max_candidates:
+            raise ValueError(
+                f"sample max_candidates={C} exceeds the storage bound "
+                f"max_candidates={self.max_candidates}: candidate rows past "
+                f"the bound were dropped at add() time and cannot be "
+                f"reconstructed (the list reference would return them)")
+
     def _draw(self, batch_size: int) -> np.ndarray:
         if self._size == 0:
             raise ValueError("empty replay buffer")
-        return self._rng.integers(0, self._size, size=batch_size)
+        idx = self._rng.integers(0, self._size, size=batch_size)
+        self._last_idx = idx
+        return idx
+
+    def _draw_prioritized(self, batch_size: int, beta: float
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """One vectorized weighted draw: inverse-CDF ``searchsorted`` over
+        the cumulative effective priorities, plus max-normalised importance
+        weights ``(N * P(i))**-beta``.
+
+        PARITY INVARIANT: with all-equal effective priorities this MUST
+        take the exact uniform path — same ``rng.integers`` call, unit
+        weights — so priorities-all-equal stays bit-identical to the
+        uniform sampler (numpy's bounded-integer draw uses rejection
+        sampling, which no weighted draw can reproduce)."""
+        if self._size == 0:
+            raise ValueError("empty replay buffer")
+        q = self._priorities[: self._size] ** self.priority_alpha
+        if q[0] == q[-1] and np.all(q == q[0]):
+            idx = self._rng.integers(0, self._size, size=batch_size)
+            weights = np.ones(batch_size, np.float32)
+        else:
+            csum = np.cumsum(q)
+            u = self._rng.random(batch_size) * csum[-1]
+            idx = np.searchsorted(csum, u, side="right")
+            idx = np.minimum(idx, self._size - 1)
+            probs = q[idx] / csum[-1]
+            w = (self._size * probs) ** -float(beta)
+            weights = (w / w.max()).astype(np.float32)
+        self._last_idx = idx
+        return idx, weights
+
+    def update_priorities(self, td_abs: np.ndarray) -> None:
+        """Refresh the priorities of the LAST sampled batch from its |TD|
+        errors (proportional variant: ``p = |td| + eps``).  Duplicate draws
+        of the same row resolve last-write-wins; the running max feeds the
+        max-priority init of subsequently added rows."""
+        if self.sampling != "prioritized":
+            raise ValueError("update_priorities called on a uniform buffer")
+        if self._last_idx is None:
+            raise ValueError("update_priorities before any sample")
+        td_abs = np.abs(np.asarray(td_abs, np.float64)).reshape(-1)
+        if td_abs.shape[0] != self._last_idx.shape[0]:
+            raise ValueError(
+                f"td batch {td_abs.shape[0]} != last sampled batch "
+                f"{self._last_idx.shape[0]}")
+        p = td_abs + self.priority_eps
+        self._priorities[self._last_idx] = p
+        self._max_priority = max(self._max_priority, float(p.max()))
 
     def _gather_packed(self, idx: np.ndarray, C: int) -> dict[str, np.ndarray]:
         k = min(C, self._cand_cap)
@@ -190,8 +294,8 @@ class ReplayBuffer:
             "next_counts": np.minimum(self._next_counts[idx], C).astype(np.int32),
         }
 
-    def sample_packed(self, batch_size: int, max_candidates: int = 160
-                      ) -> dict[str, np.ndarray]:
+    def sample_packed(self, batch_size: int, max_candidates: int = 160,
+                      *, beta: float = 0.0) -> dict[str, np.ndarray]:
         """Packed uint8 bit planes + scalar features — what the packed
         learner ships to the device (32x smaller than the dense layout):
 
@@ -199,12 +303,23 @@ class ReplayBuffer:
         rewards     f32[B]             dones       f32[B]
         next_bits   u8[B, C, FP_BITS/8] (zero past each count)
         next_frac   f32[B]             next_counts i32[B]
+        weights     f32[B]             (prioritized mode ONLY — uniform
+                                        batches keep exactly today's keys)
 
-        Draws the SAME seeded indices as ``sample`` would have.
+        Draws the SAME seeded indices as ``sample`` would have.  ``beta``
+        is the importance-weight exponent (prioritized mode; ignored under
+        uniform sampling).
         """
+        self._check_candidate_bound(max_candidates)
+        if self.sampling == "prioritized":
+            idx, weights = self._draw_prioritized(batch_size, beta)
+            out = self._gather_packed(idx, max_candidates)
+            out["weights"] = weights
+            return out
         return self._gather_packed(self._draw(batch_size), max_candidates)
 
-    def sample(self, batch_size: int, max_candidates: int = 160) -> dict[str, np.ndarray]:
+    def sample(self, batch_size: int, max_candidates: int = 160,
+               *, beta: float = 0.0) -> dict[str, np.ndarray]:
         """Returns dense arrays for the jit'd train step.
 
         states   f32[B, FP_BITS+1]
@@ -212,9 +327,10 @@ class ReplayBuffer:
         dones    f32[B]
         next_fps f32[B, C, FP_BITS+1]  (zero-padded)
         next_mask f32[B, C]
+        weights  f32[B]  (prioritized mode only)
         """
         return densify_sample(
-            self._gather_packed(self._draw(batch_size), max_candidates))
+            self.sample_packed(batch_size, max_candidates, beta=beta))
 
     # ------------------------------------------------------------ #
     # compatibility / introspection

@@ -232,6 +232,20 @@ class RolloutEngine:
         self.reset()
 
     # ------------------------------------------------------------ #
+    def set_initial_molecules(
+            self, worker_molecules: Sequence[Sequence[Molecule]]) -> None:
+        """Swap every LIVE worker's start molecules — the multi-start
+        dataset stream's per-episode assignment.  Mesh-padding (dead)
+        workers keep their empty slots.  Takes effect at the next
+        ``reset()``; ``run_episode`` resets first, so the trainer can
+        re-seed starts right before each episode."""
+        if len(worker_molecules) != self.n_live_workers:
+            raise ValueError(
+                f"expected {self.n_live_workers} live workers' molecule "
+                f"batches, got {len(worker_molecules)}")
+        pad = self.worker_initials[self.n_live_workers:]
+        self.worker_initials = [list(ms) for ms in worker_molecules] + pad
+
     def reset(self) -> None:
         self.workers = [
             [Slot(worker=w, index=i, initial=m, current=m,

@@ -1,7 +1,10 @@
 """Datasets, tokenization and input pipelines."""
 
 from repro.data.datasets import (
+    DATASETS,
+    DatasetStream,
     antioxidant_dataset,
+    load_dataset,
     public_antioxidant_dataset,
     zinc_like_dataset,
     train_test_split,
@@ -10,6 +13,7 @@ from repro.data.tokenizer import SmilesTokenizer
 from repro.data.pipeline import TokenBatcher, lm_batches_from_smiles
 
 __all__ = [
+    "DATASETS", "DatasetStream", "load_dataset",
     "antioxidant_dataset", "public_antioxidant_dataset", "zinc_like_dataset",
     "train_test_split", "SmilesTokenizer", "TokenBatcher", "lm_batches_from_smiles",
 ]

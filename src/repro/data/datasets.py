@@ -21,6 +21,8 @@ contain at least one O-H bond.
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
 from repro.chem.conformer import has_valid_conformer
@@ -201,6 +203,65 @@ def zinc_like_dataset(count: int = 512, seed: int = 20232) -> list[Molecule]:
         seen.add(key)
         out.append(mol)
     return out
+
+
+class DatasetStream:
+    """Seeded multi-start cursor over a molecule pool (ROADMAP item 5).
+
+    Shuffled-cycle semantics: each epoch visits every pool molecule exactly
+    once in a fresh seeded permutation, so W workers x E episodes of draws
+    are a pure function of ``(pool, seed)`` — the property the multi-start
+    determinism tests pin identical across every rollout mode.  ``draw``
+    crosses epoch boundaries transparently (a fleet wider than the pool
+    just wraps into the next permutation mid-draw).
+    """
+
+    def __init__(self, molecules: Sequence[Molecule], seed: int = 0):
+        if not molecules:
+            raise ValueError("empty dataset pool")
+        self._pool = list(molecules)
+        self._rng = np.random.default_rng(seed)
+        self._order = np.zeros((0,), np.int64)
+        self._pos = 0
+        self.n_drawn = 0
+        self.n_epochs = 0
+
+    def __len__(self) -> int:
+        return len(self._pool)
+
+    def draw(self, n: int) -> list[Molecule]:
+        out: list[Molecule] = []
+        while len(out) < n:
+            if self._pos >= self._order.shape[0]:
+                self._order = self._rng.permutation(len(self._pool))
+                self._pos = 0
+                self.n_epochs += 1
+            out.append(self._pool[int(self._order[self._pos])])
+            self._pos += 1
+        self.n_drawn += n
+        return out
+
+
+# TrainerConfig.dataset names resolve here (launch/train.py --dataset too)
+DATASETS = {
+    "antioxidant": antioxidant_dataset,
+    "public_antioxidant": public_antioxidant_dataset,
+    "zinc_like": zinc_like_dataset,
+}
+
+
+def load_dataset(name: str, count: int | None = None,
+                 seed: int | None = None) -> list[Molecule]:
+    """Build a registry dataset; ``None`` keeps the dataset's own default
+    count/seed.  Unknown names fail loudly with the known registry."""
+    if name not in DATASETS:
+        raise KeyError(f"unknown dataset {name!r}; known: {sorted(DATASETS)}")
+    kwargs = {}
+    if count is not None:
+        kwargs["count"] = count
+    if seed is not None:
+        kwargs["seed"] = seed
+    return DATASETS[name](**kwargs)
 
 
 def train_test_split(

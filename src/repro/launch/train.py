@@ -29,7 +29,8 @@ from repro.checkpoint import CheckpointManager
 
 
 def main() -> None:
-    from repro.core.distributed import LEARNER_MODES, ROLLOUT_MODES
+    from repro.core.distributed import LEARNER_MODES, REPLAY_MODES, ROLLOUT_MODES
+    from repro.data.datasets import DATASETS
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("rl", "lm"), default="rl")
@@ -42,6 +43,17 @@ def main() -> None:
                     help="acting path (see core.distributed)")
     ap.add_argument("--learner", choices=LEARNER_MODES, default="packed",
                     help="replay->update path (see core.distributed)")
+    ap.add_argument("--replay", choices=REPLAY_MODES, default="uniform",
+                    help="replay sampling: uniform (reference) or "
+                         "prioritized (proportional PER)")
+    ap.add_argument("--priority-alpha", type=float, default=0.6)
+    ap.add_argument("--priority-beta0", type=float, default=0.4)
+    ap.add_argument("--dataset", choices=sorted(DATASETS), default=None,
+                    help="multi-start episode stream: draw every episode's "
+                         "start molecules from this seeded dataset cursor "
+                         "(default: fixed train-split batch)")
+    ap.add_argument("--dataset-size", type=int, default=None,
+                    help="dataset pool size (default: the dataset's own)")
     ap.add_argument("--ckpt-dir", default=".cache/rl_ckpt")
     # lm args
     ap.add_argument("--arch", default="stablelm-1.6b")
@@ -66,19 +78,32 @@ def train_rl(args) -> None:
     from repro.predictors import PropertyService
     from repro.predictors.training import ensure_trained
 
+    from repro.data.datasets import load_dataset
+
     bm, bp, im, ip_, metrics = ensure_trained()
     service = PropertyService(bm, bp, im, ip_)
-    ds = antioxidant_dataset(600)
-    train, test = train_test_split(ds)
+    n_mols = args.workers * args.mols_per_worker
+    if args.dataset is not None:
+        # multi-start: reward normalisation and evaluation come from the
+        # streamed pool itself; the trainer re-draws starts every episode
+        pool = load_dataset(args.dataset, count=args.dataset_size)
+        train, molecules, dataset_pool = pool, None, pool
+    else:
+        ds = antioxidant_dataset(600)
+        train, test = train_test_split(ds)
+        molecules, dataset_pool = train[:n_mols], None
     props = dataset_property_table(train)
     rcfg = RewardConfig.from_dataset(props["bde"], props["ip"])
 
-    n_mols = args.workers * args.mols_per_worker
     cfg = TrainerConfig(
         n_workers=args.workers, mols_per_worker=args.mols_per_worker,
         episodes=args.episodes, sync_mode=args.sync, rollout=args.rollout,
-        learner=args.learner, dqn=DQNConfig(epsilon_decay=0.97))
-    trainer = DistributedTrainer(cfg, train[:n_mols], service, rcfg)
+        learner=args.learner, replay=args.replay,
+        priority_alpha=args.priority_alpha, priority_beta0=args.priority_beta0,
+        dataset=args.dataset, dataset_size=args.dataset_size,
+        dqn=DQNConfig(epsilon_decay=0.97))
+    trainer = DistributedTrainer(cfg, molecules, service, rcfg,
+                                 dataset_pool=dataset_pool)
     mgr = CheckpointManager(args.ckpt_dir)
 
     t0 = time.time()
@@ -91,7 +116,7 @@ def train_rl(args) -> None:
             mgr.save(st["episode"], trainer.mean_params())
 
     agent = trainer.as_agent(epsilon=0.0)
-    recs = greedy_optimize(agent, train[:n_mols], service, rcfg, cfg.env)
+    recs = greedy_optimize(agent, list(train[:n_mols]), service, rcfg, cfg.env)
     print(f"train-set OFR: {optimization_failure_rate(recs):.3f}")
     print(f"cache hit rate: {service.cache.hit_rate:.3f}")
 

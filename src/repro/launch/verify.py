@@ -116,7 +116,8 @@ def run_scenario(args) -> dict:
         n_workers=args.workers, mols_per_worker=args.mols_per_worker,
         episodes=args.warmup + args.episodes, sync_mode=args.sync,
         rollout=args.rollout, learner=args.learner, chem=args.chem,
-        acting=args.acting,
+        acting=args.acting, replay=args.replay,
+        priority_alpha=args.priority_alpha, priority_beta0=args.priority_beta0,
         updates_per_episode=args.updates_per_episode,
         train_batch_size=args.batch_size, max_candidates=args.max_candidates,
         dqn=DQNConfig(epsilon_decay=args.epsilon_decay),
@@ -177,6 +178,12 @@ def main() -> None:
     ap.add_argument("--chem", default="incremental")
     ap.add_argument("--acting", default="packed",
                     help="fleet acting representation (core.ACTING_MODES)")
+    ap.add_argument("--replay", default="uniform",
+                    help="replay sampling (core.REPLAY_MODES); prioritized "
+                         "with --priority-alpha 0 must match uniform bit "
+                         "for bit — the parity scenarios pin exactly that")
+    ap.add_argument("--priority-alpha", type=float, default=0.6)
+    ap.add_argument("--priority-beta0", type=float, default=0.4)
     ap.add_argument("--sync", default="episode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--warmup", type=int, default=1,
@@ -198,7 +205,7 @@ def main() -> None:
     np.savez(args.out, **out)
     print(f"[verify] nd={args.nd} W={args.workers} rollout={args.rollout} "
           f"learner={args.learner} chem={args.chem} acting={args.acting} "
-          f"sync={args.sync}: "
+          f"replay={args.replay} sync={args.sync}: "
           f"{int(out['warmup_compiles'])} warmup compiles, "
           f"{int(out['recompiles_after_warmup'])} recompiles after warmup, "
           f"{int(out['n_transitions'].sum())} transitions -> {args.out}",

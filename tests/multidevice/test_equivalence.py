@@ -50,6 +50,41 @@ def test_matrix_cell_identical_across_nd(tmp_path, cell):
         assert int(res[1]["recompiles_after_warmup"]) == 0
 
 
+def test_prioritized_parity_across_nd(tmp_path):
+    """The uniform-parity invariant at mesh scale: prioritized replay with
+    alpha = 0 (flat effective priorities forever) must be BIT-identical —
+    transitions, losses, parameters — to the uniform sampler's nd = 1
+    reference, at nd in {1, 2, 4}, with the recompile gate held at 0."""
+    cell = dict(rollout="fleet_sharded", learner="packed",
+                chem="incremental", sync="episode", acting="packed")
+    uni_dir, pri_dir = tmp_path / "uniform", tmp_path / "prioritized"
+    uni_dir.mkdir()
+    pri_dir.mkdir()
+    uni = run_cells(uni_dir, (1,), replay="uniform", **cell)
+    pri = run_cells(pri_dir, (1, 2, 4), replay="prioritized",
+                    priority_alpha=0.0, **cell)
+    for nd in (1, 2, 4):
+        assert int(pri[nd]["recompiles_after_warmup"]) == 0, \
+            f"prioritized nd={nd} recompiled after warmup"
+        assert_equivalent(uni[1], pri[nd],
+                          f"prioritized(alpha=0) nd={nd} vs uniform nd=1")
+
+
+def test_prioritized_alpha_active_self_consistent_across_nd(tmp_path):
+    """alpha > 0 prioritized training is its own cross-nd equivalence
+    class: nd in {2, 4} must reproduce its OWN nd = 1 reference bit for
+    bit (while genuinely diverging from the uniform trajectory — checked
+    in-process by tests/test_learner.py)."""
+    res = run_cells(tmp_path, (1, 2, 4), replay="prioritized",
+                    priority_alpha=0.6, rollout="fleet_sharded",
+                    learner="packed", chem="incremental", sync="episode",
+                    acting="packed")
+    for nd in (2, 4):
+        assert int(res[nd]["n_devices"]) == nd
+        assert int(res[nd]["recompiles_after_warmup"]) == 0
+        assert_equivalent(res[1], res[nd], f"prioritized(alpha=0.6) nd={nd}")
+
+
 @pytest.mark.parametrize("sync", ["episode", "step"])
 def test_ragged_fleet_pads_to_mesh(tmp_path, sync):
     """W = 6 on a 4-device mesh: two dead padding slots, and results

@@ -1,0 +1,118 @@
+"""The committed perf-trajectory series: BENCH_*.json discovery, schema
+validation (fail loudly on a mangled snapshot — the headline PR-7 bugfix),
+chronological PR-number ordering, and the per-metric diff."""
+
+import json
+
+import pytest
+
+from benchmarks.common import (
+    BENCH_SNAPSHOT_SCHEMA, BenchTrajectoryError, diff_bench_trajectory,
+    load_bench_trajectory,
+)
+
+
+def _snapshot(**summary) -> dict:
+    return {"schema": BENCH_SNAPSHOT_SCHEMA,
+            "host": {"platform": "test", "backend": "cpu", "devices": 1},
+            "summary": summary, "metrics": {}}
+
+
+def _write(tmp_path, name: str, data) -> None:
+    (tmp_path / name).write_text(
+        data if isinstance(data, str) else json.dumps(data))
+
+
+# ------------------------------------------------------------------ #
+# discovery + ordering
+# ------------------------------------------------------------------ #
+def test_loads_series_in_pr_number_order(tmp_path):
+    """Numeric ordering: PR10 sorts AFTER PR9 even though the lexicographic
+    glob order says otherwise."""
+    _write(tmp_path, "BENCH_PR10.json", _snapshot(x=3))
+    _write(tmp_path, "BENCH_PR9.json", _snapshot(x=2))
+    _write(tmp_path, "BENCH_PR6.json", _snapshot(x=1))
+    snaps = load_bench_trajectory(str(tmp_path))
+    assert [s["pr"] for s in snaps] == [6, 9, 10]
+    assert [s["name"] for s in snaps] == \
+        ["BENCH_PR6.json", "BENCH_PR9.json", "BENCH_PR10.json"]
+    assert all(s["schema"] == BENCH_SNAPSHOT_SCHEMA for s in snaps)
+
+
+def test_empty_directory_yields_empty_series(tmp_path):
+    assert load_bench_trajectory(str(tmp_path)) == []
+
+
+# ------------------------------------------------------------------ #
+# fail-loudly validation (the bugfix: no silent [] from a bad snapshot)
+# ------------------------------------------------------------------ #
+def test_malformed_json_raises(tmp_path):
+    _write(tmp_path, "BENCH_PR6.json", _snapshot(x=1))
+    _write(tmp_path, "BENCH_PR7.json", '{"schema": "bench-snapsh')  # truncated
+    with pytest.raises(BenchTrajectoryError, match="malformed JSON"):
+        load_bench_trajectory(str(tmp_path))
+
+
+def test_wrong_schema_raises(tmp_path):
+    bad = _snapshot(x=1)
+    bad["schema"] = "bench-snapshot-v0"
+    _write(tmp_path, "BENCH_PR6.json", bad)
+    with pytest.raises(BenchTrajectoryError, match="bench-snapshot-v1"):
+        load_bench_trajectory(str(tmp_path))
+
+
+def test_unrecognised_name_raises(tmp_path):
+    _write(tmp_path, "BENCH_final.json", _snapshot(x=1))
+    with pytest.raises(BenchTrajectoryError, match="BENCH_PR<n>"):
+        load_bench_trajectory(str(tmp_path))
+
+
+def test_missing_section_raises(tmp_path):
+    bad = _snapshot(x=1)
+    del bad["summary"]
+    _write(tmp_path, "BENCH_PR6.json", bad)
+    with pytest.raises(BenchTrajectoryError, match="summary"):
+        load_bench_trajectory(str(tmp_path))
+
+
+def test_non_object_snapshot_raises(tmp_path):
+    _write(tmp_path, "BENCH_PR6.json", [1, 2, 3])
+    with pytest.raises(BenchTrajectoryError, match="not an object"):
+        load_bench_trajectory(str(tmp_path))
+
+
+# ------------------------------------------------------------------ #
+# the diff
+# ------------------------------------------------------------------ #
+def test_diff_rows_and_delta_pct(tmp_path):
+    _write(tmp_path, "BENCH_PR6.json", _snapshot(speed=100.0, dropped=7))
+    _write(tmp_path, "BENCH_PR7.json", _snapshot(speed=150.0, fresh="cpu"))
+    rows = diff_bench_trajectory(load_bench_trajectory(str(tmp_path)))
+    by_metric = {r["metric"]: r for r in rows}
+    assert by_metric["speed"]["delta_pct"] == pytest.approx(50.0)
+    assert by_metric["speed"]["from"] == "BENCH_PR6.json"
+    assert by_metric["speed"]["to"] == "BENCH_PR7.json"
+    assert by_metric["dropped"]["new"] is None          # metric dropped
+    assert by_metric["dropped"]["delta_pct"] is None
+    assert by_metric["fresh"]["old"] is None            # metric added
+    assert by_metric["fresh"]["delta_pct"] is None      # non-numeric anyway
+
+
+def test_diff_single_snapshot_is_empty(tmp_path):
+    _write(tmp_path, "BENCH_PR6.json", _snapshot(x=1))
+    assert diff_bench_trajectory(load_bench_trajectory(str(tmp_path))) == []
+
+
+# ------------------------------------------------------------------ #
+# the real committed series (PR-7 acceptance: non-empty, diffable)
+# ------------------------------------------------------------------ #
+def test_committed_series_loads_and_diffs():
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snaps = load_bench_trajectory(root)
+    assert len(snaps) >= 2, "repo must commit BENCH_PR6.json and BENCH_PR7.json"
+    rows = diff_bench_trajectory(snaps)
+    assert rows, "committed series produced no diff rows"
+    assert any(r["delta_pct"] is not None for r in rows), \
+        "no shared numeric metric between consecutive committed snapshots"

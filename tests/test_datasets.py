@@ -1,0 +1,175 @@
+"""Dataset streaming: the seeded multi-start cursor (DatasetStream), the
+dataset registry (load_dataset), and the trainer-level guarantee that one
+(seed, dataset) pair yields ONE start-molecule schedule — identical across
+every rollout mode, so "which molecule does worker w start episode e on"
+is never a function of the execution strategy."""
+
+import numpy as np
+import pytest
+
+from repro.chem.smiles import from_smiles
+from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
+from repro.core.agent import QNetwork
+from repro.core.distributed import DistributedTrainer
+from repro.data import DATASETS, DatasetStream, load_dataset
+
+from conftest import OracleService as _OracleService
+
+POOL_SMILES = (
+    "C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O",
+    "OC1=CC=CC=C1O", "NC1=CC=CC=C1O", "CCC1=CC=CC=C1O",
+)
+POOL = [from_smiles(s) for s in POOL_SMILES]
+
+
+# ------------------------------------------------------------------ #
+# DatasetStream: seeded shuffled-cycle semantics
+# ------------------------------------------------------------------ #
+def test_stream_is_deterministic_in_pool_and_seed():
+    a = DatasetStream(POOL, seed=5)
+    b = DatasetStream(POOL, seed=5)
+    keys_a = [m.iso_key() for m in a.draw(17)]
+    keys_b = [m.iso_key() for m in b.draw(17)]
+    assert keys_a == keys_b
+    c = DatasetStream(POOL, seed=6)
+    assert [m.iso_key() for m in c.draw(17)] != keys_a
+
+
+def test_stream_epoch_covers_pool_exactly_once():
+    """One epoch = one fresh permutation: every pool molecule appears
+    exactly once per len(pool) draws, even when a single draw() spans an
+    epoch boundary."""
+    s = DatasetStream(POOL, seed=0)
+    n = len(POOL)
+    drawn = s.draw(4) + s.draw(2 * n - 4) + s.draw(n)   # 3 epochs, ragged
+    pool_keys = sorted(m.iso_key() for m in POOL)
+    for e in range(3):
+        epoch = drawn[e * n:(e + 1) * n]
+        assert sorted(m.iso_key() for m in epoch) == pool_keys
+    assert s.n_epochs == 3
+    assert s.n_drawn == 3 * n
+
+
+def test_stream_counts_and_small_pool_wrap():
+    """A fleet wider than the pool wraps into the next permutation
+    mid-draw — no repeats within an epoch, no exhaustion."""
+    s = DatasetStream(POOL[:2], seed=3)
+    out = s.draw(7)
+    assert len(out) == 7
+    assert s.n_epochs == 4
+    assert len(s) == 2
+
+
+def test_stream_rejects_empty_pool():
+    with pytest.raises(ValueError, match="empty"):
+        DatasetStream([])
+
+
+# ------------------------------------------------------------------ #
+# registry
+# ------------------------------------------------------------------ #
+def test_registry_names():
+    assert set(DATASETS) == {"antioxidant", "public_antioxidant", "zinc_like"}
+
+
+def test_load_dataset_unknown_name_fails_loudly():
+    with pytest.raises(KeyError, match="zinc_like"):
+        load_dataset("zinc")
+
+
+def test_load_dataset_passes_count_and_seed():
+    mols = load_dataset("antioxidant", count=8, seed=1)
+    assert len(mols) == 8
+    again = load_dataset("antioxidant", count=8, seed=1)
+    assert [m.iso_key() for m in mols] == [m.iso_key() for m in again]
+
+
+# ------------------------------------------------------------------ #
+# trainer integration: the multi-start schedule
+# ------------------------------------------------------------------ #
+def _trainer(rollout: str, W: int = 4, mols_per_worker: int = 1,
+             episodes: int = 3, seed: int = 0) -> DistributedTrainer:
+    cfg = TrainerConfig(
+        n_workers=W, mols_per_worker=mols_per_worker, episodes=episodes,
+        sync_mode="episode", rollout=rollout, chem="incremental",
+        updates_per_episode=1, train_batch_size=3, max_candidates=16,
+        dataset="inline", dqn=DQNConfig(epsilon_decay=0.9),
+        env=EnvConfig(max_steps=2), seed=seed)
+    return DistributedTrainer(cfg, molecules=None, service=_OracleService(),
+                              reward_cfg=RewardConfig(), dataset_pool=POOL,
+                              network=QNetwork(hidden=(32,)))
+
+
+def _transitions(buf):
+    return [(t.state_fp.tobytes(), t.steps_left_frac, t.reward, t.done,
+             t.next_fps.tobytes(), t.next_steps_left_frac) for t in buf._items]
+
+
+def test_multistart_schedule_identical_across_rollout_modes():
+    """Satellite pin: same seed + dataset => identical start-molecule
+    schedule AND identical replay streams across fleet/fleet_sharded/
+    fleet_pipelined (the sequential reference included)."""
+    logs, streams = {}, {}
+    for mode in ("per_worker", "fleet", "fleet_sharded", "fleet_pipelined"):
+        tr = _trainer(mode)
+        for _ in range(3):
+            tr.train_episode()
+        logs[mode] = tr.start_log
+        streams[mode] = [_transitions(b) for b in tr.buffers]
+    ref = logs["per_worker"]
+    assert len(ref) == 3 and len(set(ref)) > 1      # schedule actually varies
+    for mode, log in logs.items():
+        assert log == ref, f"{mode} start schedule diverged"
+        assert streams[mode] == streams["per_worker"], \
+            f"{mode} transition stream diverged"
+
+
+def test_multistart_draws_follow_the_stream():
+    """The trainer's episode starts are exactly the DatasetStream draws —
+    W * mols_per_worker per episode, in cursor order."""
+    tr = _trainer("fleet", W=3, mols_per_worker=2, episodes=2)
+    shadow = DatasetStream(POOL, seed=0)
+    tr.train_episode()
+    tr.train_episode()
+    expect = [tuple(m.iso_key() for m in shadow.draw(6)) for _ in range(2)]
+    assert tr.start_log == expect
+
+
+def test_dataset_seed_overrides_trainer_seed():
+    a = _trainer("fleet")
+    cfg = a.cfg
+    b_cfg = TrainerConfig(**{**cfg.__dict__, "dataset_seed": 123})
+    b = DistributedTrainer(b_cfg, molecules=None, service=_OracleService(),
+                           reward_cfg=RewardConfig(), dataset_pool=POOL,
+                           network=QNetwork(hidden=(32,)))
+    a.rollout_episode()
+    b.rollout_episode()
+    assert a.start_log != b.start_log
+
+
+def test_ctor_molecule_dataset_validation():
+    cfg = TrainerConfig(n_workers=1, mols_per_worker=1, episodes=1,
+                        env=EnvConfig(max_steps=2), seed=0)
+    with pytest.raises(ValueError, match="dataset"):
+        DistributedTrainer(cfg, molecules=None, service=_OracleService(),
+                           reward_cfg=RewardConfig(), network=QNetwork(hidden=(8,)))
+    both = TrainerConfig(**{**cfg.__dict__, "dataset": "inline"})
+    with pytest.raises(ValueError, match="molecules=None"):
+        DistributedTrainer(both, molecules=POOL[:1], service=_OracleService(),
+                           reward_cfg=RewardConfig(), dataset_pool=POOL,
+                           network=QNetwork(hidden=(8,)))
+
+
+def test_dataset_by_name_resolves_registry():
+    """TrainerConfig.dataset with no explicit pool loads from the registry
+    (tiny count so the generator stays fast)."""
+    cfg = TrainerConfig(
+        n_workers=2, mols_per_worker=1, episodes=1, rollout="fleet",
+        updates_per_episode=0, dataset="antioxidant", dataset_size=4,
+        dataset_seed=2, env=EnvConfig(max_steps=2), seed=0)
+    tr = DistributedTrainer(cfg, molecules=None, service=_OracleService(),
+                            reward_cfg=RewardConfig(), network=QNetwork(hidden=(8,)))
+    tr.rollout_episode()
+    assert len(tr.start_log) == 1
+    pool_keys = {m.iso_key() for m in load_dataset("antioxidant", count=4, seed=2)}
+    assert set(tr.start_log[0]) <= pool_keys

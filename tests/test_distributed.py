@@ -53,7 +53,7 @@ def test_modes_diverge_before_sync():
     for w, env in enumerate(tr.envs):
         env.run_episode(tr._views[w], tr.service, tr.reward_cfg, tr.buffers[w])
     batch = tr._stacked_sample()
-    p2, _, _ = tr._local_update(tr.params, tr.target_params, tr.opt_state, batch)
+    p2, _, _, _ = tr._local_update(tr.params, tr.target_params, tr.opt_state, batch)
     leaves = jax.tree_util.tree_leaves(p2)
     assert any(not bool(jnp.allclose(x[0], x[1], atol=1e-7)) for x in leaves)
 

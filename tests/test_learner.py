@@ -28,20 +28,23 @@ MOLS = [from_smiles(s) for s in
         ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O", "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
 
 
-def _trainer(learner: str, sync_mode: str, W: int, seed: int = 0
+def _trainer(learner: str, sync_mode: str, W: int, seed: int = 0,
+             replay: str = "uniform", alpha: float = 0.6
              ) -> DistributedTrainer:
     cfg = TrainerConfig(
         n_workers=W, mols_per_worker=2, episodes=2, sync_mode=sync_mode,
         learner=learner, updates_per_episode=3, train_batch_size=4,
-        max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
+        max_candidates=16, replay=replay, priority_alpha=alpha,
+        dqn=DQNConfig(epsilon_decay=0.9),
         env=EnvConfig(max_steps=3), seed=seed)
     mols = (MOLS * ((2 * W + len(MOLS) - 1) // len(MOLS)))[: 2 * W]
     return DistributedTrainer(cfg, mols, _OracleService(), RewardConfig(),
                               network=QNetwork(hidden=(32,)))
 
 
-def _run(learner: str, sync_mode: str, W: int, episodes: int = 2):
-    tr = _trainer(learner, sync_mode, W)
+def _run(learner: str, sync_mode: str, W: int, episodes: int = 2,
+         replay: str = "uniform", alpha: float = 0.6):
+    tr = _trainer(learner, sync_mode, W, replay=replay, alpha=alpha)
     stats = [tr.train_episode() for _ in range(episodes)]
     return tr, [s["loss"] for s in stats], jax.tree_util.tree_leaves(tr.params)
 
@@ -72,6 +75,69 @@ def test_learner_mode_matrix(W, sync_mode):
 def test_learner_mode_validated():
     with pytest.raises(ValueError, match="learner"):
         _trainer("bogus", "episode", 1)
+
+
+def test_replay_mode_validated():
+    with pytest.raises(ValueError, match="replay"):
+        _trainer("dense", "episode", 1, replay="rank")
+
+
+# ------------------------------------------------------------------ #
+# prioritized replay through the learner paths
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("sync_mode", ["episode", "step"])
+def test_prioritized_alpha0_bit_identical_to_uniform(sync_mode):
+    """The uniform-parity invariant end to end: alpha=0 prioritized (flat
+    effective priorities forever, since every |TD| update still yields
+    p^0 = 1) must train BIT-identically to the uniform seed path, for
+    every learner mode — the weights are unit, the priority feedback is a
+    no-op, and the sample RNG takes the exact uniform draw."""
+    _, ref_losses, ref_params = _run("dense", sync_mode, 2)
+    for mode in LEARNER_MODES:
+        _, losses, params = _run(mode, sync_mode, 2,
+                                 replay="prioritized", alpha=0.0)
+        np.testing.assert_array_equal(
+            np.asarray(losses), np.asarray(ref_losses),
+            err_msg=f"prioritized(alpha=0, {mode}) loss diverged from uniform")
+        for xm, xr in zip(params, ref_params):
+            np.testing.assert_array_equal(
+                np.asarray(xm), np.asarray(xr),
+                err_msg=f"prioritized(alpha=0, {mode}) params diverged")
+
+
+@pytest.mark.parametrize("sync_mode", ["episode", "step"])
+def test_prioritized_learner_modes_agree_and_diverge_from_uniform(sync_mode):
+    """alpha>0 prioritized training is its own equivalence class: every
+    learner mode must agree bit for bit with the dense prioritized
+    reference (including the pipelined mode's sequential fallback), while
+    ACTUALLY diverging from the uniform trajectory — otherwise the
+    priority feedback is silently disconnected."""
+    runs = {m: _run(m, sync_mode, 2, replay="prioritized", alpha=0.6)
+            for m in LEARNER_MODES}
+    _, ref_losses, ref_params = runs["dense"]
+    _, uni_losses, _ = _run("dense", sync_mode, 2)
+    assert not np.array_equal(np.asarray(ref_losses), np.asarray(uni_losses))
+    for mode in LEARNER_MODES:
+        _, losses, params = runs[mode]
+        np.testing.assert_array_equal(
+            np.asarray(losses), np.asarray(ref_losses),
+            err_msg=f"prioritized {mode} loss diverged from dense ({sync_mode})")
+        for xm, xr in zip(params, ref_params):
+            np.testing.assert_array_equal(
+                np.asarray(xm), np.asarray(xr),
+                err_msg=f"prioritized {mode} params diverged ({sync_mode})")
+
+
+def test_prioritized_beta_anneal_no_recompile():
+    """beta is shipped as a host value, not baked into the trace: moving
+    through the anneal schedule must reuse ONE compiled train step."""
+    tr = _trainer("packed", "episode", 2, replay="prioritized")
+    tr.train_episode()
+    assert jit_cache_size(tr._local_update_packed) == 1
+    for ep in (0, 3, 7, 11):
+        tr.episode = ep
+        tr.run_updates(2)
+    assert jit_cache_size(tr._local_update_packed) == 1
 
 
 # ------------------------------------------------------------------ #

@@ -1,16 +1,24 @@
 """SoA replay buffer vs the seed list-based reference: ring/eviction
 semantics, seeded sample equivalence, packed-batch consistency (host densify
-== jit densify), candidate truncation and storage growth."""
+== jit densify), candidate truncation and storage growth, and prioritized
+sampling (flat-priority bit-parity with the uniform sampler, weighted-draw
+correctness, |TD| priority feedback)."""
 
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # declared in pyproject [test]; degrade to a skip
+    HAVE_HYPOTHESIS = False
 
 from repro.core.packed_batch import (
     dense_nbytes_equivalent, densify_batch, packed_nbytes, unpack_bits,
 )
 from repro.core.replay import (
-    FP_BYTES, ListReplayBuffer, ReplayBuffer, Transition, densify_sample,
-    pack_fp,
+    FP_BYTES, SAMPLING_MODES, ListReplayBuffer, ReplayBuffer, Transition,
+    densify_sample, pack_fp,
 )
 
 RNG = np.random.default_rng(7)
@@ -177,6 +185,231 @@ def test_overwrite_clears_stale_candidate_tail():
     assert not buf._next_bits[0, 1:].any()
     batch = buf.sample(4, max_candidates=8)
     assert (batch["next_mask"].sum(-1) <= 1).all()
+
+
+# ------------------------------------------------------------------ #
+# sampling wider than the storage bound: fail loudly (regression)
+# ------------------------------------------------------------------ #
+def test_sample_at_storage_bound_matches_list():
+    """Regression pin at the truncation boundary: a storage-bounded buffer
+    sampled at EXACTLY its bound must equal the (unbounded) list reference
+    truncated at the same C — byte for byte, packed and dense."""
+    bound = 4
+    rng = np.random.default_rng(3)
+    soa = ReplayBuffer(8, seed=7, max_candidates=bound)
+    ref = ListReplayBuffer(8, seed=7)
+    for i in range(14):
+        t = _transition(rng, int(rng.integers(0, 9)), done=(i % 5 == 0))
+        soa.add(t)
+        ref.add(t)
+    a, b = soa.sample(6, max_candidates=bound), ref.sample(6, max_candidates=bound)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_sample_wider_than_storage_bound_raises():
+    """Regression for the silent-divergence bug: rows past the storage
+    bound were dropped at add() time, so sampling wider than the bound
+    CANNOT reproduce the list reference (which stores full rows and kept
+    returning the dropped candidates) — it used to zero-pad silently and
+    diverge; now it must fail loudly.  Both sample flavours."""
+    rng = np.random.default_rng(3)
+    soa = ReplayBuffer(8, seed=7, max_candidates=4)
+    soa.add(_transition(rng, 8))
+    with pytest.raises(ValueError, match="storage bound"):
+        soa.sample(4, max_candidates=8)
+    with pytest.raises(ValueError, match="storage bound"):
+        soa.sample_packed(4, max_candidates=8)
+    # unbounded storage: any sample C stays legal
+    free = ReplayBuffer(8, seed=7)
+    free.add(_transition(np.random.default_rng(3), 8))
+    free.sample(4, max_candidates=160)
+
+
+# ------------------------------------------------------------------ #
+# growth x ring wraparound audit (add_many past remaining capacity)
+# ------------------------------------------------------------------ #
+def test_add_many_growth_during_wraparound_no_stale_rows():
+    """An add_many longer than the remaining capacity — forcing BOTH
+    geometric row growth and candidate-axis growth mid-eviction, with the
+    write head behind the read tail — must land exactly like the list
+    reference: no stale interleaved rows, no leaked candidate bytes."""
+    rng = np.random.default_rng(17)
+    for capacity, episodes in ((8, (5, 9)), (96, (70, 130)), (7, (3, 11, 6))):
+        soa = ReplayBuffer(capacity, seed=1, max_candidates=6)
+        ref = ListReplayBuffer(capacity, seed=1)
+        width = 1
+        for n in episodes:
+            # widen the candidate sets every flush so the candidate axis
+            # regrows while the ring is mid-wraparound
+            ts = [_transition(rng, int(rng.integers(0, width + 1)),
+                              done=(i % 4 == 0)) for i in range(n)]
+            width = min(width * 3, 9)
+            soa.add_many(ts)
+            ref.add_many(ts)
+        assert len(soa) == len(ref)
+        bound = soa.max_candidates
+        for i, (a, b) in enumerate(zip(soa._items, ref._items)):
+            assert a.state_fp.tobytes() == b.state_fp.tobytes(), f"slot {i}"
+            np.testing.assert_array_equal(
+                a.next_fps, b.next_fps[:bound], err_msg=f"slot {i}")
+            assert a.done == b.done
+        # stored rows past each count must be zero (no stale bytes a
+        # wraparound + growth could resurrect into future samples)
+        for i in range(len(soa)):
+            k = int(soa._next_counts[i])
+            assert not soa._next_bits[i, k:].any(), f"slot {i} leaked tail"
+
+
+# ------------------------------------------------------------------ #
+# prioritized sampling
+# ------------------------------------------------------------------ #
+def test_sampling_mode_validated():
+    assert SAMPLING_MODES == ("uniform", "prioritized")
+    with pytest.raises(ValueError, match="sampling"):
+        ReplayBuffer(4, sampling="rank")
+
+
+def _flat_parity_case(seed: int, n: int, batch: int, n_draws: int,
+                      alpha: float) -> None:
+    """Core of the parity invariant: with all-equal effective priorities a
+    prioritized buffer must emit BIT-identical batches to a same-seeded
+    uniform SoA buffer AND the list reference, draw after draw, with unit
+    weights as the only extra key."""
+    rng = np.random.default_rng(3)
+    uni = ReplayBuffer(16, seed=seed, max_candidates=4)
+    pri = ReplayBuffer(16, seed=seed, max_candidates=4,
+                       sampling="prioritized", priority_alpha=alpha)
+    ref = ListReplayBuffer(16, seed=seed)
+    for i in range(n):
+        t = _transition(rng, int(rng.integers(0, 7)), done=(i % 5 == 0))
+        uni.add(t)
+        pri.add(t)
+        ref.add(t)
+    for d in range(n_draws):
+        a = uni.sample(batch, max_candidates=4)
+        b = pri.sample(batch, max_candidates=4, beta=0.4 + 0.1 * d)
+        c = ref.sample(batch, max_candidates=4)
+        assert set(b) == set(a) | {"weights"}
+        np.testing.assert_array_equal(b["weights"],
+                                      np.ones(batch, np.float32))
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=f"{k} draw {d}")
+            np.testing.assert_array_equal(a[k], c[k], err_msg=f"{k} draw {d}")
+
+
+@pytest.mark.parametrize("seed,n,batch,alpha",
+                         [(0, 6, 4, 0.0), (11, 25, 8, 0.6), (99, 12, 1, 1.0)])
+def test_prioritized_flat_priorities_bit_identical_to_uniform(seed, n, batch, alpha):
+    """Before any update_priorities call every row holds the max-priority
+    init, so the effective priorities are flat for ANY alpha — the draw
+    must take the exact uniform path (same rng.integers stream)."""
+    _flat_parity_case(seed, n, batch, n_draws=3, alpha=alpha)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**20), n=st.integers(1, 40),
+           batch=st.integers(1, 16), alpha=st.floats(0.0, 1.0),
+           W=st.sampled_from([1, 4]))
+    def test_prioritized_flat_parity_property(seed, n, batch, alpha, W):
+        """Hypothesis layer over the parity invariant, swept across W
+        same-seeded per-worker buffer triples like the trainer owns."""
+        for w in range(W):
+            _flat_parity_case(seed + w, n, batch, n_draws=2, alpha=alpha)
+else:
+    def test_prioritized_flat_parity_property():
+        pytest.importorskip("hypothesis")
+
+
+def _prio_buffer(n: int = 8, alpha: float = 1.0, seed: int = 0) -> ReplayBuffer:
+    rng = np.random.default_rng(5)
+    buf = ReplayBuffer(16, seed=seed, max_candidates=4,
+                       sampling="prioritized", priority_alpha=alpha,
+                       priority_eps=1e-3)
+    for i in range(n):
+        buf.add(_transition(rng, 3, done=(i % 5 == 0)))
+    return buf
+
+
+def test_update_priorities_shifts_sampling_mass():
+    """After |TD| feedback concentrates priority on a few rows, the draw
+    must concentrate there too (proportional sampling actually engaged)."""
+    buf = _prio_buffer(8)
+    buf.sample_packed(8, max_candidates=4, beta=0.4)
+    td = np.zeros(8)
+    hot = [int(i) for i in buf._last_idx[:2]]
+    td[:2] = 50.0                      # rows drawn first two get huge |TD|
+    buf.update_priorities(td)
+    counts = np.zeros(8)
+    for _ in range(30):
+        buf.sample_packed(16, max_candidates=4, beta=0.4)
+        for i in buf._last_idx:
+            counts[i] += 1
+    assert counts[hot].sum() > 0.8 * counts.sum()
+
+
+def test_prioritized_weights_match_formula():
+    """The emitted weights must equal the max-normalised importance
+    weights (N * P(i))^-beta computed from the priority state."""
+    buf = _prio_buffer(6, alpha=0.7)
+    buf.sample_packed(6, max_candidates=4)
+    buf.update_priorities(np.arange(6, dtype=np.float64))
+    # mirror the buffer's RNG to predict the next draw exactly
+    shadow = np.random.default_rng()
+    shadow.bit_generator.state = buf._rng.bit_generator.state
+    q = buf._priorities[:len(buf)] ** 0.7
+    csum = np.cumsum(q)
+    u = shadow.random(5) * csum[-1]
+    idx = np.minimum(np.searchsorted(csum, u, side="right"), len(buf) - 1)
+    beta = 0.55
+    w = (len(buf) * q[idx] / csum[-1]) ** -beta
+    expect = (w / w.max()).astype(np.float32)
+    batch = buf.sample_packed(5, max_candidates=4, beta=beta)
+    np.testing.assert_array_equal(buf._last_idx, idx)
+    np.testing.assert_array_equal(batch["weights"], expect)
+
+
+def test_update_priorities_semantics():
+    """|TD| + eps becomes the new priority (last write wins on duplicate
+    indices), the running max feeds newly added rows, and misuse raises."""
+    buf = _prio_buffer(4)
+    with pytest.raises(ValueError, match="before any sample"):
+        buf.update_priorities(np.ones(4))
+    buf.sample_packed(4, max_candidates=4)
+    with pytest.raises(ValueError, match="last sampled batch"):
+        buf.update_priorities(np.ones(3))
+    buf._last_idx = np.array([0, 1, 1, 2])          # duplicate draw of row 1
+    buf.update_priorities(np.array([1.0, 5.0, 2.0, -3.0]))
+    assert buf._priorities[0] == pytest.approx(1.0 + buf.priority_eps)
+    assert buf._priorities[1] == pytest.approx(2.0 + buf.priority_eps)  # last write
+    assert buf._priorities[2] == pytest.approx(3.0 + buf.priority_eps)  # |td|
+    assert buf._max_priority == pytest.approx(5.0 + buf.priority_eps)
+    rng = np.random.default_rng(9)
+    buf.add(_transition(rng, 2))                     # new row: max-priority init
+    assert buf._priorities[4] == pytest.approx(buf._max_priority)
+    uni = ReplayBuffer(4, seed=0)
+    uni.add(_transition(rng, 2))
+    uni.sample_packed(2, max_candidates=4)
+    with pytest.raises(ValueError, match="uniform"):
+        uni.update_priorities(np.ones(2))
+
+
+def test_uniform_batches_carry_no_weights_key():
+    """The uniform byte stream must stay EXACTLY the seed layout — the
+    weights key exists only in prioritized mode (and rides densify in
+    both directions)."""
+    soa, _ = _fill_pair(10, capacity=16, seed=23)
+    assert "weights" not in soa.sample_packed(4, max_candidates=4)
+    assert "weights" not in soa.sample(4, max_candidates=4)
+    pri = _prio_buffer(6)
+    packed = pri.sample_packed(4, max_candidates=4, beta=0.4)
+    assert packed["weights"].dtype == np.float32
+    dense = densify_sample(packed)
+    np.testing.assert_array_equal(dense["weights"], packed["weights"])
+    jit_dense = densify_batch({k: np.stack([v]) for k, v in packed.items()})
+    np.testing.assert_array_equal(
+        np.asarray(jit_dense["weights"])[0], packed["weights"])
 
 
 # ------------------------------------------------------------------ #
