@@ -281,6 +281,135 @@ def smoke(W: int = 8) -> None:
 
 
 # ------------------------------------------------------------------ #
+# fault smoke: the robustness CI gate (PR 8)
+# ------------------------------------------------------------------ #
+def fault_smoke(W: int = 8) -> dict:
+    """End-to-end training under a seeded FaultPlan (property-service
+    timeouts + chem transients, all inside the retry budgets) gated on
+
+    * retried-batch bit-equality: a predict() that only succeeded after
+      injected transients returns the exact batch a fault-free service
+      returns,
+    * full-run bit-equality: the faulted trainer's loss/reward trajectory
+      equals the fault-free twin's,
+    * shape discipline: 0 XLA recompiles in the measured window WITH the
+      retry/backoff machinery active (retries re-enter the same compiled
+      shapes),
+    * no degradation: zero quarantined slots when faults stay in budget.
+    """
+    import jax
+
+    from repro.core.faults import FaultPlan, FaultRule
+    from repro.predictors.service import (
+        OracleService, ResilientService, RetryPolicy,
+    )
+
+    counter = RecompileCounter.install()
+    mols = [from_smiles(s) for s in MULTISTART_SMILES[:W]]
+    emit(f"train.fault_smoke.w{W}.devices", jax.device_count(), "devices")
+
+    # micro-gate first: the retried batch itself, bit for bit
+    plan_micro = FaultPlan([FaultRule(site="predict", kind="transient",
+                                      every=1, fail_attempts=2)])
+    rsvc = ResilientService(OracleService(), RetryPolicy(),
+                            fault_plan=plan_micro, sleep=None)
+    if rsvc.predict(mols) != OracleService().predict(mols):
+        raise SystemExit("FAIL: retried predict batch != fault-free batch")
+    if rsvc.n_retries != 2:
+        raise SystemExit("FAIL: fault plan injected but no retries counted")
+
+    def build(faulted: bool):
+        plan = None
+        svc = OracleService()
+        if faulted:
+            plan = FaultPlan([
+                FaultRule(site="predict", kind="timeout", every=3,
+                          fail_attempts=1),
+                FaultRule(site="chem", kind="transient", rate=0.3,
+                          fail_attempts=1),
+            ], seed=8)
+            svc = ResilientService(svc, RetryPolicy(seed=8),
+                                   fault_plan=plan, sleep=None)
+        cfg = TrainerConfig(
+            n_workers=W, mols_per_worker=1, episodes=4, sync_mode="episode",
+            rollout="fleet_sharded", learner="packed", acting="packed",
+            chem="incremental", replay="prioritized", updates_per_episode=2,
+            train_batch_size=4, max_candidates=16, replay_capacity=256,
+            dqn=DQNConfig(epsilon_decay=0.97), env=EnvConfig(max_steps=3),
+            seed=0)
+        tr = DistributedTrainer(cfg, mols, svc, RewardConfig(),
+                                network=QNetwork(hidden=(64,)),
+                                fault_plan=plan)
+        return tr, plan, svc
+
+    ref, _, _ = build(False)
+    for _ in range(4):
+        ref.train_episode()
+
+    tr, plan, svc = build(True)
+    for _ in range(2):                       # warmup: acting + update compile
+        tr.train_episode()
+    if tr.candidate_capacity:
+        tr.reserve_candidates(int(tr.candidate_capacity * 1.3))
+    mark = counter.count
+    for _ in range(2):
+        tr.train_episode()
+    recompiles = counter.delta_since(mark)
+
+    def _traj_eq(a, b):  # episode 0's loss is nan (buffer below min fill)
+        return np.array_equal(np.asarray(a, np.float64),
+                              np.asarray(b, np.float64), equal_nan=True)
+
+    leaves = jax.tree_util.tree_leaves
+    est = tr.engine.fault_stats()
+    out = {
+        "n_faults_injected": plan.n_injected,
+        "n_retries": svc.n_retries,
+        "n_timeouts": svc.n_timeouts,
+        "n_chem_retries": est["n_chem_retries"],
+        "n_quarantined": est["n_quarantined"],
+        "recompiles_after_warmup": recompiles,
+        "bit_identical": (
+            _traj_eq(tr.loss_log, ref.loss_log)
+            and _traj_eq(tr.reward_log, ref.reward_log)
+            and all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+                    for x, y in zip(leaves(tr.params), leaves(ref.params)))),
+    }
+    emit(f"train.fault_smoke.w{W}.n_faults_injected",
+         out["n_faults_injected"], "faults", "seeded FaultPlan, in-budget")
+    emit(f"train.fault_smoke.w{W}.n_retries", out["n_retries"], "retries",
+         "property-service retry loop traffic")
+    emit(f"train.fault_smoke.w{W}.n_chem_retries", out["n_chem_retries"],
+         "retries", "chem enumeration retry traffic")
+    emit(f"train.fault_smoke.w{W}.n_quarantined", out["n_quarantined"],
+         "slots", "gate: must be 0 (faults stay inside budgets)")
+    emit(f"train.fault_smoke.w{W}.recompiles_after_warmup", recompiles,
+         "compiles", "gate: must be 0 with retries active")
+    emit(f"train.fault_smoke.w{W}.bit_identical",
+         int(out["bit_identical"]), "bool",
+         "gate: faulted trajectory == fault-free trajectory")
+
+    if out["n_faults_injected"] == 0:
+        raise SystemExit("FAIL: the fault plan never fired — vacuous gate")
+    if out["n_quarantined"] != 0:
+        raise SystemExit(
+            f"FAIL: {out['n_quarantined']} slot(s) quarantined under "
+            f"in-budget faults")
+    if recompiles != 0:
+        raise SystemExit(
+            f"FAIL: {recompiles} XLA compile(s) during faulted updates "
+            f"(retries broke shape discipline)")
+    if not out["bit_identical"]:
+        raise SystemExit(
+            "FAIL: training under absorbed faults diverged from fault-free")
+    print(f"FAULT SMOKE PASS: W={W}, {out['n_faults_injected']} faults "
+          f"injected ({out['n_retries']} service retries, "
+          f"{out['n_chem_retries']} chem retries), 0 quarantines, "
+          f"0 recompiles, bit-identical to fault-free")
+    return out
+
+
+# ------------------------------------------------------------------ #
 # multi-start end-to-end cell (the paper-scale generalist loop)
 # ------------------------------------------------------------------ #
 MULTISTART_SMILES = (
@@ -360,11 +489,16 @@ if __name__ == "__main__":
     ap.add_argument("--multistart", action="store_true",
                     help="W=512 multi-start end-to-end cell (dataset "
                          "streaming + prioritized replay)")
+    ap.add_argument("--faults", action="store_true",
+                    help="fault-injection CI gate: training under a seeded "
+                         "FaultPlan stays bit-identical, 0 recompiles")
     ap.add_argument("--w", type=int, default=8, help="smoke worker count")
     ap.add_argument("--scale", choices=("quick", "full"), default="quick")
     args = ap.parse_args()
     if args.smoke:
         smoke(args.w)
+    elif args.faults:
+        fault_smoke(args.w)
     elif args.multistart:
         multistart(args.w if args.w != 8 else 512)
     else:

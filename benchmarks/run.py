@@ -31,9 +31,11 @@ BENCHES = ("env", "fingerprint", "cache", "rollout", "train", "models",
 def bench_json(path: str) -> None:
     """Write the perf-trajectory snapshot (see module docstring): smoke
     benches only — training-free, minutes not hours — plus the measured
-    W=512 dense-vs-packed acting H2D cell and the W=512 multi-start
-    end-to-end training cell (dataset streaming + prioritized replay).
-    Finishes by printing the per-metric delta table of the whole committed
+    W=512 dense-vs-packed acting H2D cell, the W=8 fault-injection gate
+    (training under a seeded FaultPlan bit-identical to fault-free, zero
+    recompiles with retries active) and the W=512 multi-start end-to-end
+    training cell (dataset streaming + prioritized replay).  Finishes by
+    printing the per-metric delta table of the whole committed
     BENCH_*.json series, this snapshot included."""
     import json
     import platform
@@ -45,6 +47,7 @@ def bench_json(path: str) -> None:
     bench_rollout.smoke(16)
     bench_train.smoke(8)
     bench_env.smoke(16)
+    fs = bench_train.fault_smoke(8)
     h2d = bench_rollout.measure_acting_h2d(512)
     ms = bench_train.multistart(512)
 
@@ -73,6 +76,9 @@ def bench_json(path: str) -> None:
             "multistart_unique_starts_w512": int(ms["unique_starts"]),
             "prioritized_recompiles_after_warmup":
                 val("train.smoke.w8.prioritized_recompiles_after_warmup"),
+            "fault_smoke_n_faults_injected_w8": int(fs["n_faults_injected"]),
+            "fault_smoke_n_retries_w8": int(fs["n_retries"]),
+            "fault_smoke_bit_identical_w8": int(fs["bit_identical"]),
             "recompiles_after_warmup": max(
                 int(v["value"]) for k, v in RESULTS.items()
                 if k.endswith("recompiles_after_warmup")),

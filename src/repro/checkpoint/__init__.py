@@ -1,5 +1,25 @@
 """Pytree checkpointing (npz-based, no external deps)."""
 
-from repro.checkpoint.checkpoint import save_pytree, load_pytree, CheckpointManager
+from repro.checkpoint.checkpoint import (
+    CheckpointError,
+    CheckpointManager,
+    load_flat,
+    load_pytree,
+    rng_state_from_array,
+    rng_state_to_array,
+    save_flat,
+    save_pytree,
+    unflatten_like,
+)
 
-__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+__all__ = [
+    "CheckpointError",
+    "CheckpointManager",
+    "load_flat",
+    "load_pytree",
+    "rng_state_from_array",
+    "rng_state_to_array",
+    "save_flat",
+    "save_pytree",
+    "unflatten_like",
+]

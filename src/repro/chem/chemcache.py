@@ -94,9 +94,22 @@ class ChemCache:
             return entry
 
     def put(self, mol: Molecule, actions, packed_fps: np.ndarray) -> None:
-        packed_fps.flags.writeable = False
+        # ALL-OR-NOTHING: materialise and validate the complete entry
+        # before touching the lock, the dict, or the caller's array.  A
+        # faulted enumeration handing over a throwing iterable or a
+        # mismatched fingerprint matrix must leave the cache untouched
+        # (the old order froze the caller's array and could start the
+        # insert before tuple(actions) had finished materialising).
+        actions = tuple(actions)
+        packed_fps = np.asarray(packed_fps)
+        if packed_fps.ndim != 2 or packed_fps.shape[0] != len(actions):
+            raise ValueError(
+                f"half-built chem entry refused: {len(actions)} actions vs "
+                f"packed_fps shape {packed_fps.shape}")
         sig = molecule_signature(mol)
         key = mol.canonical_key()
+        entry = ChemEntry(sig, actions, packed_fps)
+        packed_fps.flags.writeable = False
         with self._lock:
             existing = self._data.get(key)
             if existing is not None and existing.signature != sig:
@@ -107,7 +120,7 @@ class ChemCache:
                 return
             if existing is not None:
                 self._data.move_to_end(key)
-            self._data[key] = ChemEntry(sig, tuple(actions), packed_fps)
+            self._data[key] = entry
             if len(self._data) > self.capacity:
                 self._data.popitem(last=False)
 

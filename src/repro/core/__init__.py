@@ -25,6 +25,9 @@ Layout:
   finetune.py     §3.5 fine-tuning from the general model
   filter.py       §3.5 filter script
   jit_stats.py    XLA recompile accounting for the acting hot path
+  faults.py       deterministic fault injection (FaultPlan) + the
+                  quarantine/incident machinery behind the self-healing
+                  fleet and the crash-resume matrix
 """
 
 from repro.core.reward import RewardConfig, compute_reward, INVALID_CONFORMER_REWARD
@@ -36,10 +39,15 @@ from repro.core.distributed import (
     DistributedTrainer, TrainerConfig, ACTING_MODES, LEARNER_MODES,
     ROLLOUT_MODES,
 )
+from repro.core.faults import (
+    FaultError, FaultPlan, FaultRule, FaultTimeout, Incident, TransientFault,
+)
 from repro.core.finetune import fine_tune
 from repro.core.filter import filter_molecules, FilterCriteria
 
 __all__ = [
+    "FaultError", "FaultPlan", "FaultRule", "FaultTimeout", "Incident",
+    "TransientFault",
     "RewardConfig", "compute_reward", "INVALID_CONFORMER_REWARD",
     "QNetwork", "DQNAgent", "DQNConfig",
     "ReplayBuffer", "Transition",

@@ -354,10 +354,12 @@ class DistributedTrainer:
         mesh: Mesh | None = None,
         network: QNetwork | None = None,
         dataset_pool: list[Molecule] | None = None,
+        fault_plan=None,
     ):
         self.cfg = cfg
         self.service = service
         self.reward_cfg = reward_cfg
+        self.fault_plan = fault_plan
         self.network = network or QNetwork()
         W = cfg.n_workers
         need = W * cfg.mols_per_worker
@@ -435,7 +437,8 @@ class DistributedTrainer:
             cfg.env, pipeline_threads=cfg.pipeline_threads,
             chem=cfg.chem, chem_cache=self.chem_cache,
             pad_workers_to=self.n_padded_workers,
-            packed_states=cfg.acting != "dense")
+            packed_states=cfg.acting != "dense",
+            fault_plan=fault_plan)
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         # storage truncates where sample() would anyway (cfg.max_candidates),
         # so the SoA candidate axis never outgrows what training can see
@@ -472,6 +475,11 @@ class DistributedTrainer:
 
         self.epsilon = cfg.dqn.epsilon_initial
         self.episode = 0
+        # per-episode scalar trajectories, checkpointed with the trainer so
+        # a resumed run's report carries the FULL history (crash-resume
+        # equivalence diffs these against the straight-through reference)
+        self.loss_log: list[float] = []
+        self.reward_log: list[float] = []
         self._views = [_WorkerView(self, w) for w in range(W)]
         self._fleet_in_sharding = fleet_sharding(self.mesh)
         self._fleet_policy = _FleetView(self, acting=cfg.acting)
@@ -709,13 +717,16 @@ class DistributedTrainer:
         flat = [r for recs in records for r in recs]
         final = [r for r in flat if r.done]
         n_invalid = sum(1 for r in flat if not r.conformer_valid)
-        return {
+        st = {
             "episode": self.episode,
             "mean_final_reward": float(np.mean([r.reward for r in final])) if final else float("nan"),
             "loss": float(np.mean(losses)) if losses else float("nan"),
             "epsilon": self.epsilon,
             "invalid_conformer_rate": n_invalid / max(len(flat), 1),
         }
+        self.loss_log.append(st["loss"])
+        self.reward_log.append(st["mean_final_reward"])
+        return st
 
     def rollout_episode(self) -> list[list[StepRecord]]:
         """One full acting episode for every worker, grouped per worker.
@@ -970,6 +981,136 @@ class DistributedTrainer:
                 print(f"[ep {st['episode']}] reward {st['mean_final_reward']:.3f} "
                       f"loss {st['loss']:.4f} eps {st['epsilon']:.3f}")
         return stats
+
+    # ------------------------------------------------------------ #
+    # checkpoint / resume (bit-exact)
+    # ------------------------------------------------------------ #
+    # Everything a continued run's bits depend on, at an EPISODE BOUNDARY:
+    # the three stacked device trees, every worker's action RNG, every
+    # replay buffer ring (priorities included — their sample RNG rides in
+    # the buffer state), the dataset cursor, the episode counter (which
+    # alone positions the target-update cadence and the PER beta anneal)
+    # and the exact epsilon float.  NOT state: the engine (rebuilt from the
+    # start assignment every reset), the chemistry cache and property
+    # memo (pure deterministic memos — they change speed, never bits), and
+    # the fleet views' sticky batch capacities (the resumed process
+    # re-warms its own jit cache).
+
+    def _config_fingerprint(self) -> str:
+        """Canonical JSON of the full TrainerConfig — a resume against a
+        DIFFERENT config is an operator error, caught loudly at load."""
+        import dataclasses
+        import json
+
+        def enc(o):
+            if isinstance(o, frozenset):
+                return sorted(o)
+            raise TypeError(f"unserialisable config field: {o!r}")
+        return json.dumps(dataclasses.asdict(self.cfg), sort_keys=True,
+                          default=enc)
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Flat ``{key: array}`` snapshot of the complete training state
+        (``repro.checkpoint.save_flat`` layout)."""
+        import json
+        from repro.checkpoint.checkpoint import rng_state_to_array
+        flat: dict[str, np.ndarray] = {}
+        flat["meta/config"] = np.frombuffer(
+            self._config_fingerprint().encode(), np.uint8).copy()
+        flat["meta/episode"] = np.asarray(self.episode, np.int64)
+        flat["meta/epsilon"] = np.asarray(self.epsilon, np.float64)
+        flat["meta/n_updates"] = np.asarray(self.n_updates, np.int64)
+        flat["meta/loss_log"] = np.asarray(self.loss_log, np.float64)
+        flat["meta/reward_log"] = np.asarray(self.reward_log, np.float64)
+        flat["meta/start_log"] = np.frombuffer(json.dumps(
+            [list(t) for t in self.start_log]).encode(), np.uint8).copy()
+        for w, rng in enumerate(self._worker_rngs):
+            flat[f"rng/worker_{w}"] = rng_state_to_array(rng)
+        for name, tree in (("params", self.params),
+                           ("target", self.target_params),
+                           ("opt", self.opt_state)):
+            for i, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+                flat[f"{name}/{i}"] = np.asarray(leaf)
+        for w, buf in enumerate(self.buffers):
+            for k, v in buf.state_dict().items():
+                flat[f"replay/{w}/{k}"] = v
+        if self._dataset_stream is not None:
+            for k, v in self._dataset_stream.state_dict().items():
+                flat[f"dataset/{k}"] = v
+        return flat
+
+    def load_state_dict(self, flat) -> None:
+        """Restore a :meth:`state_dict` snapshot; the continued run is
+        bit-identical to one that never stopped (tests/multidevice
+        crash-resume matrix)."""
+        import json
+        from repro.checkpoint.checkpoint import (
+            CheckpointError, rng_state_from_array)
+        got = bytes(np.asarray(flat["meta/config"], np.uint8)).decode()
+        want = self._config_fingerprint()
+        if got != want:
+            raise CheckpointError(
+                "checkpoint was written under a different TrainerConfig — "
+                "resume requires the identical configuration")
+        self.episode = int(flat["meta/episode"])
+        self.epsilon = float(flat["meta/epsilon"])
+        self.n_updates = int(flat["meta/n_updates"])
+        self.loss_log = [float(x) for x in
+                         np.asarray(flat["meta/loss_log"], np.float64)]
+        self.reward_log = [float(x) for x in
+                           np.asarray(flat["meta/reward_log"], np.float64)]
+        self.start_log = [tuple(x) for x in json.loads(
+            bytes(np.asarray(flat["meta/start_log"], np.uint8)).decode())]
+        for w in range(len(self._worker_rngs)):
+            self._worker_rngs[w] = rng_state_from_array(flat[f"rng/worker_{w}"])
+        shard = lambda x: jax.device_put(
+            x, NamedSharding(self.mesh, P("data")))
+        for name, attr in (("params", "params"), ("target", "target_params"),
+                           ("opt", "opt_state")):
+            live = getattr(self, attr)
+            treedef = jax.tree_util.tree_structure(live)
+            leaves = []
+            for i, ref in enumerate(jax.tree_util.tree_leaves(live)):
+                key = f"{name}/{i}"
+                if key not in flat:
+                    raise CheckpointError(f"checkpoint missing leaf {key!r}")
+                arr = np.asarray(flat[key])
+                if tuple(arr.shape) != tuple(ref.shape):
+                    raise CheckpointError(
+                        f"leaf {key!r}: checkpoint shape {arr.shape} != "
+                        f"live shape {tuple(ref.shape)}")
+                leaves.append(shard(jnp.asarray(arr, dtype=ref.dtype)))
+            setattr(self, attr, jax.tree_util.tree_unflatten(treedef, leaves))
+        for w, buf in enumerate(self.buffers):
+            prefix = f"replay/{w}/"
+            sub = {k[len(prefix):]: v for k, v in flat.items()
+                   if k.startswith(prefix)}
+            if not sub:
+                raise CheckpointError(f"checkpoint missing replay state "
+                                      f"for worker {w}")
+            buf.load_state_dict(sub)
+        if self._dataset_stream is not None:
+            sub = {k[len("dataset/"):]: v for k, v in flat.items()
+                   if k.startswith("dataset/")}
+            if not sub:
+                raise CheckpointError(
+                    "trainer streams episode starts but the checkpoint "
+                    "carries no dataset cursor")
+            self._dataset_stream.load_state_dict(sub)
+
+    def save_checkpoint(self, manager, step: int | None = None) -> int:
+        """Snapshot into a ``repro.checkpoint.CheckpointManager`` (flat
+        layout); returns the step label (default: the episode counter)."""
+        label = self.episode if step is None else int(step)
+        manager.save(label, self.state_dict(), flat=True)
+        return label
+
+    def restore_checkpoint(self, manager, step: int | None = None) -> int:
+        """Load the latest (or given) snapshot from a manager; returns the
+        restored episode counter."""
+        _, flat = manager.restore_flat(step)
+        self.load_state_dict(flat)
+        return self.episode
 
     # ------------------------------------------------------------ #
     # evaluation / export

@@ -64,6 +64,7 @@ from repro.chem.fingerprint import (
     FP_BITS, batch_morgan_fingerprints, incremental_fingerprints_grouped,
     pack_fps)
 from repro.chem.molecule import ALLOWED_RING_SIZES, Molecule
+from repro.core.faults import FaultError, Incident, TransientFault
 from repro.core.replay import FP_BYTES, ReplayBuffer, Transition, unpack_fp
 from repro.core.reward import RewardConfig, compute_reward
 
@@ -178,6 +179,15 @@ def as_fleet_policy(obj) -> FleetPolicy:
     return AgentFleetPolicy(obj)
 
 
+@dataclass(frozen=True)
+class _EnumFailure:
+    """Sentinel a failed per-molecule chemistry computation returns instead
+    of a ``(actions, fps, packed)`` tuple — the quarantine signal that
+    travels through the enumeration batch without poisoning its siblings."""
+    key: str       # molecule canonical key
+    error: str     # repr of the terminal exception
+
+
 class RolloutEngine:
     """Advances W workers' slot batches in lockstep, fleet-batched.
 
@@ -190,7 +200,8 @@ class RolloutEngine:
     def __init__(self, worker_molecules: Sequence[Sequence[Molecule]],
                  cfg: EnvConfig | None = None, pipeline_threads: int | None = None,
                  chem: str = "full", chem_cache: ChemCache | None = None,
-                 pad_workers_to: int | None = None, packed_states: bool = False):
+                 pad_workers_to: int | None = None, packed_states: bool = False,
+                 fault_plan=None, chem_retries: int = 2):
         if chem not in CHEM_MODES:
             raise ValueError(f"chem must be one of {CHEM_MODES}, got {chem!r}")
         self.cfg = cfg if cfg is not None else EnvConfig()
@@ -223,6 +234,18 @@ class RolloutEngine:
         self.chem_enum_s = 0.0   # host seconds in candidate enumeration
         self.chem_fp_s = 0.0     # host seconds in candidate fingerprints
         self._stats_lock = threading.Lock()  # pipelined threads accumulate
+        # self-healing: a slot whose chem/property path raises a terminal
+        # FaultError drains to dead under quarantine (empty successor set,
+        # structured Incident record) and is revived from the worker's
+        # start assignment at the next episode boundary (run_episode ->
+        # reset()); transient chem faults are retried in place
+        self.fault_plan = fault_plan
+        self.chem_retries = int(chem_retries)
+        self.incidents: list[Incident] = []
+        self.episode_counter = 0
+        self.n_quarantined = 0
+        self.n_chem_retries = 0
+        self.n_pipeline_restarts = 0
         self._enumerated = False
         # leave a core for the main thread (property featurize + the XLA
         # dispatch): oversubscribing a small host makes the overlap a loss
@@ -298,6 +321,55 @@ class RolloutEngine:
             max_atoms=self.cfg.max_atoms,
         )
 
+    def _record_incident(self, *, site: str, worker: int, slot: int,
+                         key: str, error: str, action: str) -> None:
+        with self._stats_lock:
+            self.incidents.append(Incident(
+                episode=self.episode_counter, step=self.n_env_steps,
+                site=site, worker=worker, slot=slot, key=key,
+                error=error, action=action))
+
+    def _enum_or_failure(self, m: Molecule):
+        """``_enumerate_one`` under the fault plan: retries transient chem
+        faults in place (bit-identical — enumeration is pure), degrades a
+        terminal fault to an :class:`_EnumFailure` sentinel instead of
+        letting one molecule sink the whole batch.  Thread-safe and
+        thread-order independent: injection keys on molecule content."""
+        if self.fault_plan is None:
+            return self._enumerate_one(m)
+        key = m.canonical_key()
+        attempt = 0
+        while True:
+            try:
+                self.fault_plan.check_key("chem", key)
+                return self._enumerate_one(m)
+            except FaultError as e:
+                return _EnumFailure(key=key, error=repr(e))
+            except TransientFault as e:
+                if attempt >= self.chem_retries:
+                    return _EnumFailure(key=key, error=repr(e))
+                attempt += 1
+                with self._stats_lock:
+                    self.n_chem_retries += 1
+
+    def _quarantine(self, s: Slot, *, site: str, key: str, error: str) -> None:
+        """Drain a faulted slot to dead: empty candidate set, in-flight
+        transition completed with an empty successor (the double-DQN max
+        values it at zero — identical to the no-legal-action death), and a
+        structured incident on the operator trail.  The slot revives from
+        the worker's start assignment at the next ``reset()``."""
+        s.candidates = []
+        s.cand_fps = np.zeros((0, FP_BITS), np.float32)
+        s.cand_fps_packed = np.zeros((0, FP_BYTES), np.uint8)
+        if s.pending is not None:
+            s.pending.next_fps = s.cand_fps_packed
+            s.pending.next_steps_left_frac = (s.steps_left - 1) / self.cfg.max_steps
+        s.steps_left = 0
+        with self._stats_lock:
+            self.n_quarantined += 1
+        self._record_incident(site=site, worker=s.worker, slot=s.index,
+                              key=key, error=error, action="quarantined")
+
     def _compute_enum(self, mols: Sequence[Molecule]
                       ) -> list[tuple[Sequence[Action], np.ndarray, np.ndarray]]:
         """Pure per-molecule work: candidate actions, their fingerprints
@@ -310,11 +382,14 @@ class RolloutEngine:
         if self.chem == "incremental":
             return self._compute_enum_incremental(mols)
         t0 = time.perf_counter()
-        cands = [self._enumerate_one(m) for m in mols]
+        cands = [self._enum_or_failure(m) for m in mols]
         t1 = time.perf_counter()
         # the full path materialises every candidate and recomputes every
-        # fingerprint from scratch — the pinned reference behaviour
-        flat = [a.result for acts in cands for a in acts]
+        # fingerprint from scratch — the pinned reference behaviour.
+        # Failed molecules carry their sentinel through; their siblings'
+        # fingerprint batch is unchanged (composition-independent).
+        flat = [a.result for acts in cands
+                if not isinstance(acts, _EnumFailure) for a in acts]
         fps = batch_morgan_fingerprints(flat) if flat else \
             np.zeros((0, FP_BITS), np.float32)
         packed = pack_fps(fps)
@@ -324,6 +399,9 @@ class RolloutEngine:
             self.chem_fp_s += t2 - t1
         out, off = [], 0
         for acts in cands:
+            if isinstance(acts, _EnumFailure):
+                out.append(acts)
+                continue
             out.append((acts, fps[off:off + len(acts)],
                         packed[off:off + len(acts)]))
             off += len(acts)
@@ -358,25 +436,34 @@ class RolloutEngine:
             else:
                 rep_of[sig] = i
                 uniq.append(i)
-        acts_by = [self._enumerate_one(mols[i]) for i in uniq]
+        acts_by = [self._enum_or_failure(mols[i]) for i in uniq]
         t1 = time.perf_counter()
-        if uniq:
+        # failed molecules keep their sentinel; only intact ones enter the
+        # grouped fingerprint batch and the cache (all-or-nothing put)
+        good = [(i, acts) for i, acts in zip(uniq, acts_by)
+                if not isinstance(acts, _EnumFailure)]
+        for i, acts in zip(uniq, acts_by):
+            if isinstance(acts, _EnumFailure):
+                out[i] = acts
+        if good:
             fps_by = incremental_fingerprints_grouped(
-                [mols[i] for i in uniq], acts_by)
-            for i, acts, fps in zip(uniq, acts_by, fps_by):
+                [mols[i] for i, _ in good], [acts for _, acts in good])
+            for (i, acts), fps in zip(good, fps_by):
                 packed = pack_fps(fps)
                 if cache is not None:
                     cache.put(mols[i], acts, packed)
                 out[i] = (acts, fps, packed)
-            for i, rep in dup_of.items():
-                out[i] = out[rep]
+        for i, rep in dup_of.items():
+            out[i] = out[rep]   # duplicates share results AND failures
         # cache hits rebuild the dense rows from the packed bits (exact:
         # the fingerprints are {0,1}-valued) — unless the engine runs
         # packed acting, where nothing ever reads the dense rows and the
         # unpack would be the hot path's only host f32 materialisation
         if not self.packed_states:
-            out = [(acts, unpack_fp(packed) if fps is None else fps, packed)
-                   for acts, fps, packed in out]
+            out = [res if isinstance(res, _EnumFailure) else
+                   (res[0], unpack_fp(res[2]) if res[1] is None else res[1],
+                    res[2])
+                   for res in out]
         t2 = time.perf_counter()
         with self._stats_lock:
             self.chem_enum_s += t1 - t0
@@ -388,8 +475,14 @@ class RolloutEngine:
                     ) -> None:
         """Install fresh candidate sets; complete pending transitions; kill
         slots with no legal action (their pending gets an empty successor
-        set, which the double-DQN max values at zero)."""
-        for s, (acts, fps, packed) in zip(slots, results, strict=True):
+        set, which the double-DQN max values at zero).  A slot whose
+        chemistry failed terminally (``_EnumFailure``) is quarantined —
+        same empty-successor death, plus an incident record."""
+        for s, res in zip(slots, results, strict=True):
+            if isinstance(res, _EnumFailure):
+                self._quarantine(s, site="chem", key=res.key, error=res.error)
+                continue
+            acts, fps, packed = res
             s.candidates = acts
             s.cand_fps = fps
             s.cand_fps_packed = packed
@@ -530,11 +623,44 @@ class RolloutEngine:
                 chosen.append((s, s.candidates[a_idx], s.cand_fps_packed[a_idx]))
         return chosen
 
+    def _predict_chosen(self, service, chosen):
+        """Fleet property batch with per-molecule fault isolation.  The
+        happy path is ONE ``service.predict`` over all chosen successors —
+        bit-identical to the reference.  If that batch fails terminally
+        (retries exhausted), each molecule is retried in isolation so one
+        poisoned successor quarantines one slot, not the fleet; failed rows
+        come back as ``None``."""
+        mols = [a.result for _, a, _ in chosen]
+        try:
+            return service.predict(mols)
+        except FaultError:
+            props = []
+            for (s, a, _), m in zip(chosen, mols, strict=True):
+                try:
+                    props.append(service.predict([m])[0])
+                except FaultError as e:
+                    props.append(None)
+                    self._record_incident(
+                        site="predict", worker=s.worker, slot=s.index,
+                        key=m.canonical_key(), error=repr(e),
+                        action="quarantined")
+            return props
+
     def _apply_step(self, chosen, props, reward_cfg: RewardConfig,
                     buffers) -> list[StepRecord]:
-        """Commit the chosen actions: rewards, transitions, slot advance."""
+        """Commit the chosen actions: rewards, transitions, slot advance.
+        A ``None`` property row (terminal predict fault, isolated by
+        ``_predict_chosen``) quarantines its slot: no transition, no step
+        record, episode over — revived at the next reset."""
         records: list[StepRecord] = []
         for (s, act, fp), pr in zip(chosen, props, strict=True):
+            if pr is None:
+                # the pending (if any) was already flushed at _begin_step,
+                # so draining here loses no committed transition
+                s.steps_left = 0
+                with self._stats_lock:
+                    self.n_quarantined += 1
+                continue
             s.current = act.result
             s.steps_left -= 1
             done = s.steps_left <= 0
@@ -610,22 +736,51 @@ class RolloutEngine:
         chosen = self._select(live_by_worker, q_by_worker, policy, plans)
 
         # ---- ONE property batch over the chosen successors fleet-wide -- #
-        props = service.predict([a.result for _, a, _ in chosen])
+        props = self._predict_chosen(service, chosen)
 
         records = self._apply_step(chosen, props, reward_cfg, buffers)
         self._enumerate_all()
         self._flush_dead(buffers)
         return records
 
+    def _enum_shard(self, mols: Sequence[Molecule]):
+        """One pipelined shard, run on a pool thread.  The fault plan's
+        ``pipeline`` site models the thread itself dying mid-shard."""
+        if self.fault_plan is not None:
+            self.fault_plan.check_call("pipeline")
+        return self._compute_enum(mols)
+
     def _submit_enum(self, pairs: Sequence[tuple[Slot, Molecule]]) -> list:
-        """Shard ``(slot, successor)`` chemistry across the host pool."""
+        """Shard ``(slot, successor)`` chemistry across the host pool.
+        Returns ``(future, shard_molecules)`` pairs so the supervisor
+        (``_collect_enum``) can re-run a crashed shard inline."""
         if not pairs:
             return []
         pool = self._get_pool()
         mols = [m for _, m in pairs]
         shard = -(-len(mols) // self._pipeline_threads)
-        return [pool.submit(self._compute_enum, mols[i:i + shard])
+        return [(pool.submit(self._enum_shard, mols[i:i + shard]),
+                 mols[i:i + shard])
                 for i in range(0, len(mols), shard)]
+
+    def _collect_enum(self, shards) -> list:
+        """Supervised harvest of the pipelined shards: a shard whose thread
+        died (injected ``pipeline`` fault) is re-run inline on the calling
+        thread — per-shard chemistry is composition-independent and pure,
+        so the restarted results are bit-identical to what the dead thread
+        would have produced."""
+        results: list = []
+        for fut, mols in shards:
+            try:
+                results.extend(fut.result())
+            except (TransientFault, FaultError) as e:
+                with self._stats_lock:
+                    self.n_pipeline_restarts += 1
+                self._record_incident(
+                    site="pipeline", worker=-1, slot=-1, key="",
+                    error=repr(e), action="restarted")
+                results.extend(self._compute_enum(mols))
+        return results
 
     def step_pipelined(
         self,
@@ -682,15 +837,15 @@ class RolloutEngine:
                if s.steps_left - 1 > 0 and id(s) not in early_slots]
         futures = self._submit_enum(nxt)
 
-        props = service.predict([a.result for _, a, _ in chosen])
+        props = self._predict_chosen(service, chosen)
         records = self._apply_step(chosen, props, reward_cfg, buffers)
 
         if early_futs:
             self._apply_enum([s for s, _ in early],
-                             [r for f in early_futs for r in f.result()])
+                             self._collect_enum(early_futs))
         if futures:
             self._apply_enum([s for s, _ in nxt],
-                             [r for f in futures for r in f.result()])
+                             self._collect_enum(futures))
         self._flush_dead(buffers)
         return records
 
@@ -703,7 +858,14 @@ class RolloutEngine:
         buffers: Sequence[ReplayBuffer | None] | None = None,
         pipelined: bool = False,
     ) -> list[StepRecord]:
-        """Reset + roll a full fleet episode; returns ALL step records."""
+        """Reset + roll a full fleet episode; returns ALL step records.
+
+        ``reset()`` is also the REVIVAL hook: slots quarantined by faults
+        last episode were drained to dead, and here they are rebuilt from
+        the worker's start assignment (``set_initial_molecules`` — the
+        dataset cursor's per-episode draw) exactly like any other slot —
+        a revived fleet is indistinguishable from a fresh one."""
+        self.episode_counter += 1
         self.reset()
         step = self.step_pipelined if pipelined else self.step
         all_recs: list[StepRecord] = []
@@ -724,6 +886,18 @@ class RolloutEngine:
         if self.chem_cache is not None:
             st.update(self.chem_cache.stats())
         return st
+
+    def fault_stats(self) -> dict:
+        """Self-healing accounting: quarantines, in-place retries,
+        supervised pipeline restarts, and the structured incident trail."""
+        with self._stats_lock:
+            return {
+                "n_quarantined": self.n_quarantined,
+                "n_chem_retries": self.n_chem_retries,
+                "n_pipeline_restarts": self.n_pipeline_restarts,
+                "n_incidents": len(self.incidents),
+                "incidents": [i.as_dict() for i in self.incidents],
+            }
 
     def reset_chem_stats(self) -> None:
         self.chem_enum_s = 0.0

@@ -55,6 +55,13 @@ def main() -> None:
     ap.add_argument("--dataset-size", type=int, default=None,
                     help="dataset pool size (default: the dataset's own)")
     ap.add_argument("--ckpt-dir", default=".cache/rl_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=5,
+                    help="full trainer-state checkpoint every N episodes "
+                         "(bit-exact resume granularity)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from --ckpt-dir and "
+                         "continue; the continued run is bit-identical to "
+                         "one that never stopped (docs/robustness.md)")
     # lm args
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--reduced", action="store_true")
@@ -105,15 +112,22 @@ def train_rl(args) -> None:
     trainer = DistributedTrainer(cfg, molecules, service, rcfg,
                                  dataset_pool=dataset_pool)
     mgr = CheckpointManager(args.ckpt_dir)
+    if args.resume:
+        ep0 = trainer.restore_checkpoint(mgr)
+        print(f"resumed from episode {ep0} ({args.ckpt_dir})", flush=True)
 
     t0 = time.time()
-    for ep in range(args.episodes):
+    while trainer.episode < args.episodes:
         st = trainer.train_episode()
-        if (ep + 1) % 5 == 0 or ep == args.episodes - 1:
-            print(f"[ep {st['episode']:4d}] reward {st['mean_final_reward']:8.3f} "
+        ep = st["episode"]
+        if ep % 5 == 0 or ep == args.episodes:
+            print(f"[ep {ep:4d}] reward {st['mean_final_reward']:8.3f} "
                   f"loss {st['loss']:10.4f} eps {st['epsilon']:.3f} "
                   f"({time.time()-t0:.0f}s)", flush=True)
-            mgr.save(st["episode"], trainer.mean_params())
+        if ep % max(1, args.ckpt_every) == 0 or ep == args.episodes:
+            # FULL trainer state (params, opt, replay rings, RNGs, dataset
+            # cursor) — what --resume restores bit-exactly
+            trainer.save_checkpoint(mgr)
 
     agent = trainer.as_agent(epsilon=0.0)
     recs = greedy_optimize(agent, list(train[:n_mols]), service, rcfg, cfg.env)

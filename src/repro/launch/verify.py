@@ -31,6 +31,22 @@ The report carries everything the equivalence matrix pins across nd:
 tests/multidevice compares these reports at nd in {1, 2, 4} (plus the
 ragged W-not-divisible-by-nd fleets that pad to the mesh with dead slots);
 identical bits across nd is the acceptance criterion, not a tolerance.
+
+PR-8 adds two robustness scenario families on the same runner:
+
+* crash-resume: ``--ckpt-dir D`` checkpoints the FULL trainer state after
+  every episode; ``--kill-at K`` additionally SIGKILLs the process after
+  episode K's checkpoint (having first done post-checkpoint work the crash
+  destroys); ``--resume`` restores the latest checkpoint and finishes the
+  run, treating its first episode back as the compile-warmup window.  The
+  resumed report must be BIT-identical (losses, rewards, transition
+  digests, replay-state digests, parameter leaves) to a straight-through
+  reference — and carry 0 recompiles after warmup on the resumed process.
+* fault injection: ``--faults predict,chem`` arms a seeded FaultPlan
+  (property-service timeouts, chem exceptions, pipelined-thread crashes)
+  behind a ResilientService retry wrapper.  With faults inside the retry
+  budgets the report must be bit-identical to the fault-free run; the
+  injected/retry counters in the report prove the faults actually fired.
 """
 
 import os
@@ -63,6 +79,7 @@ if __name__ == "__main__":
 import argparse
 import hashlib
 import json
+import signal
 
 
 MOLS_SMILES = ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O",
@@ -83,6 +100,47 @@ def _transition_digest(buf) -> str:
         h.update(t.next_fps.tobytes())
         h.update(np.float64(t.next_steps_left_frac).tobytes())
     return h.hexdigest()
+
+
+def _replay_state_digest(buf) -> str:
+    """SHA-256 over the buffer's FULL serialised state: the SoA rings,
+    per-slot priorities, cursor (pos/size), max-priority and the sample
+    RNG — what the crash-resume matrix must reproduce bit-exactly."""
+    import numpy as np
+
+    h = hashlib.sha256()
+    for k, v in sorted(buf.state_dict().items()):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()
+
+
+def _build_fault_plan(args):
+    """Seeded FaultPlan from the --faults site list (None when unarmed)."""
+    if not args.faults:
+        return None
+    from repro.core.faults import FaultPlan, FaultRule
+    rules = []
+    for site in args.faults.split(","):
+        site = site.strip()
+        if site == "predict":
+            # property-service timeouts on a counter schedule, absorbed by
+            # the ResilientService retry budget
+            rules.append(FaultRule(site="predict", kind="timeout",
+                                   every=args.fault_every,
+                                   fail_attempts=args.fault_attempts))
+        elif site == "chem":
+            # content-keyed transient chem exceptions, retried in place
+            rules.append(FaultRule(site="chem", kind="transient",
+                                   rate=args.fault_rate,
+                                   fail_attempts=args.fault_attempts))
+        elif site == "pipeline":
+            rules.append(FaultRule(site="pipeline", kind="transient",
+                                   every=args.fault_every,
+                                   fail_attempts=args.fault_attempts))
+        else:
+            raise SystemExit(f"FAIL: unknown fault site {site!r}")
+    return FaultPlan(rules, seed=args.fault_seed)
 
 
 def run_scenario(args) -> dict:
@@ -125,33 +183,85 @@ def run_scenario(args) -> dict:
     need = args.workers * args.mols_per_worker
     mols = [from_smiles(MOLS_SMILES[i % len(MOLS_SMILES)]) for i in range(need)]
     hidden = tuple(int(h) for h in args.hidden.split(","))
-    tr = DistributedTrainer(cfg, mols, OracleService(), RewardConfig(),
-                            mesh=mesh, network=QNetwork(hidden=hidden))
+
+    plan = _build_fault_plan(args)
+    service = OracleService()
+    if plan is not None:
+        # retry wrapper over the deterministic stub; sleep=None makes the
+        # (deterministic, capped) backoff a no-op so scenarios stay fast
+        from repro.predictors.service import ResilientService, RetryPolicy
+        service = ResilientService(service, RetryPolicy(seed=args.fault_seed),
+                                   fault_plan=plan, sleep=None)
+    tr = DistributedTrainer(cfg, mols, service, RewardConfig(),
+                            mesh=mesh, network=QNetwork(hidden=hidden),
+                            fault_plan=plan)
     assert tr.mesh.devices.size == args.nd
     assert tr.engine.n_workers == tr.n_padded_workers
     assert tr.n_padded_workers % args.nd == 0
 
+    mgr = None
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(args.ckpt_dir)
+    start_ep = 0
+    if args.resume:
+        if mgr is None:
+            raise SystemExit("FAIL: --resume requires --ckpt-dir")
+        start_ep = tr.restore_checkpoint(mgr)
+
+    total = args.warmup + args.episodes
+
+    def run_one() -> None:
+        tr.train_episode()
+        if mgr is not None and not args.resume:
+            # checkpoint cadence: every episode (the writer side of the
+            # crash-resume matrix; the resumed side only reads)
+            tr.save_checkpoint(mgr)
+        if args.kill_at is not None and tr.episode == args.kill_at:
+            # post-checkpoint work the crash destroys — resume must
+            # reproduce it bit-identically from the last snapshot
+            tr.train_episode()
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    # a resumed process compiles everything fresh, so its first episode
+    # back is its compile-warmup window no matter where the run stopped
+    n_warm = (args.warmup - start_ep) if start_ep < args.warmup \
+        else (1 if start_ep < total else 0)
     with counter.window() as warm:
-        stats = [tr.train_episode() for _ in range(args.warmup)]
+        for _ in range(n_warm):
+            run_one()
         # one ladder rung of candidate headroom past the warmup high-water
         # mark, so drift in the measured episodes cannot grow the jit shape
         if tr.candidate_capacity:
             tr.reserve_candidates(int(tr.candidate_capacity * 1.3))
     with counter.window() as measured:
-        stats += [tr.train_episode() for _ in range(args.episodes)]
+        while tr.episode < total:
+            run_one()
 
+    fault_stats = tr.engine.fault_stats()
     out = {
         "n_devices": np.int64(tr.mesh.devices.size),
         "device_pool": np.int64(jax.device_count()),
         "n_live_workers": np.int64(tr.n_live_workers),
         "n_padded_workers": np.int64(tr.n_padded_workers),
-        "losses": np.asarray([s["loss"] for s in stats], np.float64),
-        "rewards": np.asarray([s["mean_final_reward"] for s in stats], np.float64),
+        # the trainer's checkpointed per-episode logs, so a resumed run's
+        # report carries the FULL trajectory, pre-crash episodes included
+        "losses": np.asarray(tr.loss_log, np.float64),
+        "rewards": np.asarray(tr.reward_log, np.float64),
         "warmup_compiles": np.int64(warm.count),
         "recompiles_after_warmup": np.int64(measured.count),
         "transition_digests": np.asarray(
             [_transition_digest(b) for b in tr.buffers]),
+        "replay_state_digests": np.asarray(
+            [_replay_state_digest(b) for b in tr.buffers]),
         "n_transitions": np.asarray([len(b) for b in tr.buffers], np.int64),
+        "n_faults_injected": np.int64(plan.n_injected if plan is not None else 0),
+        "n_retries": np.int64(getattr(service, "n_retries", 0)),
+        "n_timeouts": np.int64(getattr(service, "n_timeouts", 0)),
+        "n_quarantined": np.int64(fault_stats["n_quarantined"]),
+        "n_chem_retries": np.int64(fault_stats["n_chem_retries"]),
+        "n_pipeline_restarts": np.int64(fault_stats["n_pipeline_restarts"]),
+        "n_incidents": np.int64(fault_stats["n_incidents"]),
         "meta": np.asarray(json.dumps(vars(args), sort_keys=True)),
     }
     # exact parameter bits for every LIVE worker (dead mesh-padding rows are
@@ -197,6 +307,27 @@ def main() -> None:
     ap.add_argument("--hidden", default="32",
                     help="comma-separated QNetwork hidden sizes")
     ap.add_argument("--epsilon-decay", type=float, default=0.9)
+    # crash-resume scenarios (docs/robustness.md)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint the full trainer state here after "
+                         "every episode")
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="SIGKILL the process after episode K's checkpoint "
+                         "(plus uncheckpointed post-crash work)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest --ckpt-dir checkpoint and "
+                         "finish the run")
+    # deterministic fault injection (core.faults.FaultPlan)
+    ap.add_argument("--faults", default=None,
+                    help="comma list of armed sites: predict,chem,pipeline")
+    ap.add_argument("--fault-every", type=int, default=3,
+                    help="serial sites: fault every Nth call")
+    ap.add_argument("--fault-rate", type=float, default=0.25,
+                    help="keyed sites: fraction of molecule keys that fault")
+    ap.add_argument("--fault-attempts", type=int, default=1,
+                    help="consecutive failures per scheduled call/key "
+                         "(> the retry budget makes the fault terminal)")
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args()
 
     import numpy as np

@@ -1,0 +1,111 @@
+"""Crash-resume truth run: SIGKILL a training child mid-run, resume it
+from its last checkpoint, and pin the resumed report BIT-identical to a
+straight-through reference of the same seed — at nd in {1, 2, 4}, for
+uniform AND prioritized replay, on a packed learner/acting cell, with the
+recompiles-after-warmup gate held at 0 on the resumed process.
+
+Three children per cell (see repro.launch.verify):
+
+* reference — the run that never stops;
+* kill      — checkpoints after every episode, then after episode K's
+  checkpoint performs MORE work (a full uncheckpointed episode) and
+  SIGKILLs itself: the crash always destroys in-flight state;
+* resume    — restores the newest checkpoint and finishes the run.
+
+Equality covers the full loss/reward trajectories (pre-crash episodes
+included — the trainer logs ride in the checkpoint), the per-worker
+transition-stream digests, the serialised replay-state digests (SoA rings
++ priorities + cursors + sample RNG) and every parameter leaf.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from mdhelpers import CHILD_TIMEOUT_S, SRC, assert_equivalent
+
+# nd sweep x replay mode on the packed fast path; one cell also covers the
+# pipelined rollout + async acting so the overlap machinery resumes too
+CELLS = (
+    dict(nd=1, replay="uniform", rollout="fleet_sharded", learner="packed",
+         acting="packed"),
+    dict(nd=2, replay="prioritized", rollout="fleet_sharded",
+         learner="packed", acting="packed"),
+    dict(nd=4, replay="uniform", rollout="fleet_pipelined", learner="packed",
+         acting="packed_async"),
+)
+
+WARMUP, EPISODES, KILL_AT = 1, 3, 2
+
+
+def _spawn(out: Path, *extra: str, **kw) -> subprocess.Popen:
+    cmd = [sys.executable, "-m", "repro.launch.verify", "--out", str(out)]
+    for k, v in kw.items():
+        cmd += ["--" + k.replace("_", "-"), str(v)]
+    cmd += list(extra)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+
+
+def _wait(p: subprocess.Popen) -> tuple[int, str]:
+    try:
+        stdout, _ = p.communicate(timeout=CHILD_TIMEOUT_S)
+    finally:
+        if p.poll() is None:
+            p.kill()
+            p.communicate()
+    return p.returncode, stdout
+
+
+@pytest.mark.parametrize(
+    "cell", CELLS,
+    ids=lambda c: f"nd{c['nd']}-{c['replay']}-{c['rollout']}-{c['acting']}")
+def test_killed_run_resumes_bit_identical(tmp_path, cell):
+    base = dict(cell, mols_per_worker=2, warmup=WARMUP, episodes=EPISODES,
+                seed=5, chem="incremental")
+    ckpt = tmp_path / "ckpt"
+
+    # reference and kill children are independent — overlap them
+    p_ref = _spawn(tmp_path / "ref.npz", **base)
+    p_kill = _spawn(tmp_path / "kill.npz", ckpt_dir=str(ckpt),
+                    kill_at=KILL_AT, **base)
+    rc_kill, out_kill = _wait(p_kill)
+    rc_ref, out_ref = _wait(p_ref)
+    assert rc_ref == 0, f"reference child failed:\n{out_ref}"
+    # the kill child must die BY the SIGKILL, not finish or fail earlier
+    assert rc_kill == -signal.SIGKILL, \
+        f"kill child exited {rc_kill} (expected SIGKILL):\n{out_kill}"
+    assert not (tmp_path / "kill.npz").exists(), \
+        "killed child wrote a report — it survived past the crash point"
+    steps = sorted(int(f.stem.split("_")[1])
+                   for f in ckpt.glob("ckpt_*.npz"))
+    assert KILL_AT in steps, f"no checkpoint at the kill episode: {steps}"
+
+    rc_res, out_res = _wait(
+        _spawn(tmp_path / "res.npz", "--resume", ckpt_dir=str(ckpt), **base))
+    assert rc_res == 0, f"resumed child failed:\n{out_res}"
+
+    with np.load(tmp_path / "ref.npz") as z:
+        ref = {k: z[k] for k in z.files}
+    with np.load(tmp_path / "res.npz") as z:
+        res = {k: z[k] for k in z.files}
+
+    ctx = f"nd={cell['nd']} replay={cell['replay']} resume"
+    assert_equivalent(ref, res, ctx)
+    np.testing.assert_array_equal(
+        res["replay_state_digests"], ref["replay_state_digests"],
+        err_msg=f"{ctx}: serialised replay state diverged "
+                f"(rings/priorities/cursor/RNG)")
+    # full trajectory in the resumed report: pre-crash episodes included
+    assert len(res["losses"]) == WARMUP + EPISODES
+    # the resumed process compiled fresh but must not recompile once its
+    # first episode back (its warmup window) is done
+    assert int(res["recompiles_after_warmup"]) == 0, \
+        f"{ctx}: recompiles after warmup on the resumed process"

@@ -1,0 +1,199 @@
+"""Checkpoint layer: manifest-validated loads, the LATEST pointer, corrupt-
+file fallback, the kill-mid-write torture case, RNG state round-trips and
+the fault-injected save retries.
+
+The robustness contract under test (docs/robustness.md): a checkpoint file
+either loads COMPLETELY or raises ``CheckpointError`` — never a partial or
+garbage tree — and a manager restore walks back through the rotation until
+it finds a readable snapshot.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointError, CheckpointManager, load_flat, load_pytree,
+    rng_state_from_array, rng_state_to_array, save_flat, save_pytree,
+    unflatten_like,
+)
+
+TREE = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": {"c": np.asarray(3, np.int64),
+              "d": np.ones((4,), np.uint8)}}
+
+
+# ------------------------------------------------------------------ #
+# manifest validation + corruption
+# ------------------------------------------------------------------ #
+def test_flat_roundtrip_and_manifest(tmp_path):
+    path = str(tmp_path / "x.npz")
+    flat = {"p/0": np.arange(4, dtype=np.float64),
+            "p/1": np.asarray(7, np.int64)}
+    save_flat(path, flat)
+    out = load_flat(path)
+    assert sorted(out) == sorted(flat)
+    for k in flat:
+        np.testing.assert_array_equal(out[k], flat[k])
+
+
+def test_reserved_manifest_key_refused(tmp_path):
+    with pytest.raises(ValueError):
+        save_flat(str(tmp_path / "x.npz"), {"__manifest__": np.zeros(1)})
+
+
+def test_missing_file_is_filenotfound_not_corrupt(tmp_path):
+    # absent != corrupt: restore fallback walks past corrupt files but a
+    # missing path must keep its standard, distinguishable exception
+    with pytest.raises(FileNotFoundError):
+        load_flat(str(tmp_path / "nope.npz"))
+
+
+def test_truncated_checkpoint_raises_loud(tmp_path):
+    path = str(tmp_path / "x.npz")
+    save_pytree(path, TREE)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointError):
+        load_pytree(path, TREE)
+
+
+def test_garbage_file_raises_checkpoint_error(tmp_path):
+    path = str(tmp_path / "x.npz")
+    with open(path, "wb") as f:
+        f.write(b"not an npz archive at all")
+    with pytest.raises(CheckpointError):
+        load_flat(path)
+
+
+def test_missing_key_vs_manifest_raises(tmp_path):
+    # an archive whose key set disagrees with its own manifest is corrupt
+    path = str(tmp_path / "x.npz")
+    save_flat(path, {"a": np.zeros(2), "b": np.ones(2)})
+    data = dict(np.load(path))
+    del data["b"]
+    np.savez(path, **data)   # manifest still lists "b"
+    with pytest.raises(CheckpointError):
+        load_flat(path)
+
+
+def test_unmanifested_archive_raises(tmp_path):
+    # a plain npz (no manifest at all) is not a valid checkpoint
+    path = str(tmp_path / "x.npz")
+    np.savez(path, a=np.zeros(2))
+    with pytest.raises(CheckpointError):
+        load_flat(path)
+
+
+def test_kill_mid_write_torture(tmp_path):
+    """Simulated kill-at-any-byte: for truncations at many offsets, the
+    load either succeeds completely (only when nothing was cut) or raises
+    CheckpointError — NEVER returns a partial/garbage tree."""
+    path = str(tmp_path / "x.npz")
+    save_pytree(path, TREE)
+    blob = open(path, "rb").read()
+    rng = np.random.default_rng(0)
+    offsets = sorted(set(
+        list(rng.integers(1, len(blob), size=40)) + [1, len(blob) - 1]))
+    for off in offsets:
+        with open(path, "wb") as f:
+            f.write(blob[:off])
+        try:
+            out = load_pytree(path, TREE)
+        except CheckpointError:
+            continue
+        np.testing.assert_array_equal(out["a"], TREE["a"])
+        np.testing.assert_array_equal(out["b"]["d"], TREE["b"]["d"])
+        assert off == len(blob), \
+            f"truncation at {off}/{len(blob)} loaded without error"
+
+
+def test_unflatten_like_validates_shape_and_missing():
+    flat = {"a": np.zeros((2, 3), np.float32),
+            "b/c": np.asarray(1, np.int64), "b/d": np.zeros((4,), np.uint8)}
+    out = unflatten_like(dict(flat), TREE)
+    assert out["a"].shape == (2, 3)
+    bad = dict(flat)
+    bad["a"] = np.zeros((9, 9), np.float32)
+    with pytest.raises(CheckpointError):
+        unflatten_like(bad, TREE)
+    del flat["b/c"]
+    with pytest.raises(CheckpointError):
+        unflatten_like(flat, TREE)
+
+
+# ------------------------------------------------------------------ #
+# manager: LATEST pointer + fallback walk
+# ------------------------------------------------------------------ #
+def test_latest_pointer_and_stale_pointer_fallback(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=3)
+    for s in (1, 2, 3):
+        mgr.save(s, TREE)
+    assert (tmp_path / "LATEST").read_text().strip() == "3"
+    # a stale/garbage pointer must fall back to the directory scan
+    (tmp_path / "LATEST").write_text("999")
+    assert mgr.latest_step() == 3
+    (tmp_path / "LATEST").write_text("garbage")
+    assert mgr.latest_step() == 3
+
+
+def test_corrupt_newest_falls_back_to_previous(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=3)
+    for s in (1, 2):
+        mgr.save(s, TREE)
+    # truncate the newest snapshot (simulated torn write that survived)
+    newest = tmp_path / "ckpt_2.npz"
+    blob = newest.read_bytes()
+    newest.write_bytes(blob[: len(blob) // 3])
+    step, out = mgr.restore(TREE)
+    assert step == 1
+    np.testing.assert_array_equal(out["a"], TREE["a"])
+
+
+def test_all_corrupt_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=3)
+    mgr.save(1, TREE)
+    p = tmp_path / "ckpt_1.npz"
+    p.write_bytes(p.read_bytes()[:10])
+    with pytest.raises(CheckpointError):
+        mgr.restore(TREE)
+
+
+def test_save_retries_under_fault_plan(tmp_path):
+    from repro.core.faults import FaultPlan, FaultRule
+    # every write faults once; save() must retry and land the snapshot
+    plan = FaultPlan([FaultRule(site="checkpoint", kind="transient",
+                                every=1, fail_attempts=1)])
+    mgr = CheckpointManager(str(tmp_path), fault_plan=plan, save_retries=2)
+    mgr.save(1, TREE)
+    assert mgr.latest_step() == 1
+    assert mgr.n_save_retries == 1
+    step, out = mgr.restore(TREE)
+    np.testing.assert_array_equal(out["a"], TREE["a"])
+
+
+def test_save_retries_exhausted_raise(tmp_path):
+    from repro.core.faults import FaultPlan, FaultRule
+    plan = FaultPlan([FaultRule(site="checkpoint", kind="transient",
+                                every=1, fail_attempts=10)])
+    mgr = CheckpointManager(str(tmp_path), fault_plan=plan, save_retries=2)
+    with pytest.raises(CheckpointError):
+        mgr.save(1, TREE)
+    assert mgr.latest_step() is None   # nothing half-written became LATEST
+
+
+# ------------------------------------------------------------------ #
+# RNG state round-trip
+# ------------------------------------------------------------------ #
+def test_rng_state_roundtrip_exact():
+    rng = np.random.default_rng(1234)
+    rng.random(17)           # advance into an arbitrary mid-stream state
+    rng.integers(0, 10, 3)
+    arr = rng_state_to_array(rng)
+    assert arr.dtype == np.uint64 and arr.shape == (6,)
+    clone = rng_state_from_array(arr)
+    np.testing.assert_array_equal(clone.random(32), rng.random(32))
+    np.testing.assert_array_equal(clone.integers(0, 1000, 16),
+                                  rng.integers(0, 1000, 16))

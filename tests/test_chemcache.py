@@ -131,6 +131,83 @@ def test_stats_snapshot_consistent_while_hammered(ref):
     assert (st["hits"], st["misses"], st["relabel_misses"]) == (0, 0, 0)
 
 
+def test_put_is_all_or_nothing_under_faulted_enumeration(ref):
+    """A faulted enumeration handing ``put`` a throwing iterable or a
+    fingerprint matrix that disagrees with the action count must leave the
+    cache COMPLETELY untouched — no key inserted, no incumbent evicted, the
+    caller's array not frozen — even while other threads hammer the same
+    keys.  This is the fault-injection satellite for the chem layer: a
+    crash mid-handoff can never publish a half-built entry."""
+    mols, entries = ref
+    cache = ChemCache(capacity=8)
+    acts0, packed0 = entries[0]
+    cache.put(mols[0], acts0, packed0.copy())        # the incumbent
+
+    def exploding(n):
+        """Iterable that dies after yielding n actions."""
+        def gen():
+            for i, a in enumerate(acts0):
+                if i >= n:
+                    raise RuntimeError("enumeration thread died mid-shard")
+                yield a
+        return gen()
+
+    # throwing iterable: the exception propagates, nothing is inserted
+    before = len(cache)
+    mine = entries[1][1].copy()
+    with pytest.raises(RuntimeError, match="died mid-shard"):
+        cache.put(mols[1], exploding(2), mine)
+    assert len(cache) == before and cache.get(mols[1]) is None
+    assert mine.flags.writeable                      # caller's array untouched
+
+    # mismatched bits-vs-actions: refused loudly, incumbent survives
+    with pytest.raises(ValueError, match="half-built chem entry refused"):
+        cache.put(mols[0], acts0[:2], packed0.copy())
+    served = cache.get(mols[0])
+    assert served is not None and np.array_equal(served.packed_fps, packed0)
+
+    # now under contention: poisoned puts racing valid gets/puts
+    errors = []
+    barrier = threading.Barrier(N_THREADS)
+
+    def storm(tid):
+        rng = np.random.default_rng(tid)
+        barrier.wait()
+        try:
+            for _ in range(OPS_PER_THREAD):
+                i = int(rng.integers(len(mols)))
+                acts, packed = entries[i]
+                roll = rng.random()
+                if roll < 0.25:
+                    with pytest.raises(RuntimeError):
+                        cache.put(mols[i], exploding(0), packed.copy())
+                elif roll < 0.5:
+                    with pytest.raises(ValueError):
+                        cache.put(mols[i], acts[:1], packed.copy())
+                else:
+                    e = cache.get(mols[i])
+                    if e is None:
+                        cache.put(mols[i], acts, packed.copy())
+                    elif not np.array_equal(e.packed_fps, packed):
+                        raise AssertionError("half-built entry was served")
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=storm, args=(t,))
+               for t in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    # every surviving entry is complete and keyed on its own bits
+    for i, m in enumerate(mols):
+        e = cache.get(m)
+        if e is not None:
+            assert len(e.actions) == e.packed_fps.shape[0]
+            assert np.array_equal(e.packed_fps, entries[i][1])
+
+
 def test_relabel_twin_never_replaces_incumbent_under_contention(ref):
     """Threads alternately pushing a molecule and its relabelled twin: the
     first labelling in wins and every later conflicting put is refused, so

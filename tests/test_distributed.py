@@ -148,7 +148,9 @@ def test_checkpoint_manager_rotation(tmp_path):
     for s in (1, 2, 3):
         mgr.save(s, tree)
     assert mgr.latest_step() == 3
-    assert len(os.listdir(tmp_path)) == 2
+    assert sorted(p.name for p in tmp_path.glob("ckpt_*.npz")) == \
+        ["ckpt_2.npz", "ckpt_3.npz"]
+    assert (tmp_path / "LATEST").read_text().strip() == "3"
     step, out = mgr.restore(tree)
     assert step == 3
 

@@ -1,0 +1,294 @@
+"""Deterministic fault injection + the retry/quarantine machinery.
+
+The three gates this module pins (ISSUE-8 acceptance):
+
+* a FaultPlan's injection schedule is reproducible — and for keyed (chem)
+  sites independent of thread/call order;
+* retried property batches are BIT-identical to first-try batches (the
+  injection point sits before the deterministic predictor);
+* training under a seeded FaultPlan whose faults stay inside the retry
+  budgets is bit-identical to the fault-free run, while exhausted budgets
+  degrade to quarantined slots + structured incident records — never a
+  crash, never silent divergence.
+"""
+
+import numpy as np
+import pytest
+
+from repro.chem.smiles import from_smiles
+from repro.core import DQNConfig, EnvConfig, RewardConfig, TrainerConfig
+from repro.core.agent import QNetwork
+from repro.core.distributed import DistributedTrainer
+from repro.core.faults import (
+    FaultError, FaultPlan, FaultRule, FaultTimeout, TransientFault,
+)
+from repro.predictors.service import ResilientService, RetryPolicy
+
+from conftest import OracleService
+
+MOLS = [from_smiles(s) for s in
+        ("C1=CC=CC=C1O", "CC1=CC(C)=CC(C)=C1O",
+         "CC1=CC=CC=C1O", "OC1=CC=CC=C1O")]
+
+
+def _trainer(fault_plan=None, service=None, **over) -> DistributedTrainer:
+    cfg = TrainerConfig(
+        n_workers=2, mols_per_worker=2, episodes=2, updates_per_episode=2,
+        train_batch_size=8, max_candidates=16,
+        dqn=DQNConfig(epsilon_decay=0.9), env=EnvConfig(max_steps=3),
+        seed=0, **over)
+    return DistributedTrainer(
+        cfg, MOLS, service if service is not None else OracleService(),
+        RewardConfig(), network=QNetwork(hidden=(32,)),
+        fault_plan=fault_plan)
+
+
+def _fingerprints(tr) -> tuple:
+    """Everything the equivalence gate compares: replay state + params."""
+    import jax
+    reps = tuple(tuple(sorted((k, v.tobytes()) for k, v in
+                              b.state_dict().items())) for b in tr.buffers)
+    params = tuple(np.asarray(l).tobytes()
+                   for l in jax.tree_util.tree_leaves(tr.params))
+    return reps, params
+
+
+# ------------------------------------------------------------------ #
+# FaultPlan semantics
+# ------------------------------------------------------------------ #
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        FaultRule(site="predict", kind="nope", every=1)
+    with pytest.raises(ValueError):
+        FaultRule(site="predict")                    # neither every nor rate
+    with pytest.raises(ValueError):
+        FaultRule(site="predict", every=2, rate=0.5)  # both
+    with pytest.raises(ValueError):
+        FaultRule(site="predict", every=0)
+    with pytest.raises(ValueError):                  # duplicate site
+        FaultPlan([FaultRule(site="predict", every=1),
+                   FaultRule(site="predict", every=2)])
+
+
+def test_serial_schedule_counts_logical_calls():
+    """every=3, fail_attempts=2: logical calls 3, 6, ... fail exactly twice
+    each (each retry re-enters the checker), then succeed."""
+    plan = FaultPlan([FaultRule(site="predict", kind="transient",
+                                every=3, fail_attempts=2)])
+    pattern = []
+    for _ in range(12):          # 12 logical calls with in-place retries
+        attempts = 0
+        while True:
+            try:
+                plan.check_call("predict")
+                break
+            except TransientFault:
+                attempts += 1
+        pattern.append(attempts)
+    assert pattern == [0, 0, 2, 0, 0, 2, 0, 0, 2, 0, 0, 2]
+    assert plan.n_injected == 4 * 2
+
+
+def test_serial_schedule_reproducible():
+    def run():
+        plan = FaultPlan([FaultRule(site="checkpoint", every=2)])
+        out = []
+        for _ in range(8):
+            try:
+                plan.check_call("checkpoint")
+                out.append(0)
+            except TransientFault:
+                out.append(1)
+        return out
+    assert run() == run()
+
+
+def test_keyed_schedule_is_call_order_independent():
+    """chem faults key on CONTENT: any arrival order of the same key set
+    injects the identical fault set — the pipelined threads' soundness."""
+    keys = [f"mol-{i}" for i in range(50)]
+
+    def faulted(order):
+        plan = FaultPlan([FaultRule(site="chem", rate=0.3,
+                                    fail_attempts=1)], seed=7)
+        hit = set()
+        for k in order:
+            try:
+                plan.check_key("chem", k)
+            except TransientFault:
+                hit.add(k)
+        return hit
+
+    fwd = faulted(keys)
+    rev = faulted(list(reversed(keys)))
+    assert fwd == rev
+    assert 0 < len(fwd) < len(keys)      # the rate actually bites
+
+
+def test_keyed_fail_attempts_per_key():
+    plan = FaultPlan([FaultRule(site="chem", rate=1.0, fail_attempts=2)])
+    n_fail = 0
+    for _ in range(3):
+        try:
+            plan.check_key("chem", "k")
+        except TransientFault:
+            n_fail += 1
+    assert n_fail == 2                   # third attempt succeeds
+
+
+def test_fault_kinds_map_to_exceptions():
+    plan = FaultPlan([FaultRule(site="a", kind="timeout", every=1),
+                      FaultRule(site="b", kind="crash", every=1)])
+    with pytest.raises(FaultTimeout):
+        plan.check_call("a")
+    with pytest.raises(FaultError):
+        plan.check_call("b")
+
+
+# ------------------------------------------------------------------ #
+# ResilientService
+# ------------------------------------------------------------------ #
+def test_retried_batch_bit_identical():
+    """THE retry gate: a batch that succeeded only after transient faults
+    must equal the batch a fault-free service returns, bit for bit."""
+    plan = FaultPlan([FaultRule(site="predict", kind="transient",
+                                every=1, fail_attempts=2)])
+    svc = ResilientService(OracleService(), RetryPolicy(max_retries=3),
+                           fault_plan=plan, sleep=None)
+    ref = OracleService().predict(MOLS)
+    got = svc.predict(MOLS)
+    assert svc.n_retries == 2 and plan.n_injected == 2
+    for g, r in zip(got, ref, strict=True):
+        assert g == r
+
+
+def test_retries_exhausted_escalate_to_fault_error():
+    plan = FaultPlan([FaultRule(site="predict", kind="transient",
+                                every=1, fail_attempts=50)])
+    svc = ResilientService(OracleService(), RetryPolicy(max_retries=2),
+                           fault_plan=plan, sleep=None)
+    with pytest.raises(FaultError):
+        svc.predict(MOLS[:1])
+    assert svc.n_retries == 2
+
+
+def test_real_exceptions_propagate_unretried():
+    class Broken:
+        def predict(self, mols):
+            raise ValueError("a bug, not weather")
+    svc = ResilientService(Broken(), RetryPolicy(max_retries=3), sleep=None)
+    with pytest.raises(ValueError):
+        svc.predict(MOLS[:1])
+    assert svc.n_retries == 0
+
+
+def test_timeout_then_recovery():
+    import time as _time
+
+    class SlowOnce:
+        def __init__(self):
+            self.calls = 0
+
+        def predict(self, mols):
+            self.calls += 1
+            if self.calls == 1:
+                _time.sleep(0.6)   # in (timeout, 2*timeout): the retry's
+            return ["ok"] * len(mols)  # queued call still beats deadline 2
+
+    svc = ResilientService(SlowOnce(), RetryPolicy(max_retries=2,
+                                                   timeout_s=0.4),
+                           sleep=None)
+    assert svc.predict(MOLS[:2]) == ["ok", "ok"]
+    assert svc.n_timeouts == 1 and svc.n_retries == 1
+
+
+def test_backoff_deterministic_and_capped():
+    p = RetryPolicy(backoff_base_s=0.1, backoff_cap_s=0.5, seed=3)
+    a = ResilientService(OracleService(), p, sleep=None)
+    b = ResilientService(OracleService(), p, sleep=None)
+    sa = [a._backoff_s(k) for k in range(8)]
+    sb = [b._backoff_s(k) for k in range(8)]
+    assert sa == sb
+    assert all(0 < s <= 0.5 for s in sa)
+
+
+def test_delegation_passes_through():
+    inner = OracleService()
+    svc = ResilientService(inner, sleep=None)
+    svc.predict(MOLS)
+    assert svc.n_calls == inner.n_calls >= 1   # __getattr__ delegation
+
+
+# ------------------------------------------------------------------ #
+# training under faults
+# ------------------------------------------------------------------ #
+def test_training_bit_identical_under_absorbed_faults():
+    """ISSUE-8 criterion: property-service timeouts + chem transients
+    inside the retry budgets leave training BIT-identical to fault-free."""
+    ref = _trainer()
+    ref.train(2)
+
+    plan = FaultPlan([
+        FaultRule(site="predict", kind="timeout", every=3, fail_attempts=1),
+        FaultRule(site="chem", kind="transient", rate=0.4, fail_attempts=1),
+    ], seed=11)
+    svc = ResilientService(OracleService(), RetryPolicy(seed=11),
+                           fault_plan=plan, sleep=None)
+    tr = _trainer(fault_plan=plan, service=svc)
+    tr.train(2)
+
+    assert plan.n_injected > 0, "the plan never fired — vacuous test"
+    assert tr.engine.fault_stats()["n_quarantined"] == 0
+    assert _fingerprints(tr) == _fingerprints(ref)
+
+
+def test_exhausted_chem_retries_quarantine_with_incidents():
+    """Terminal chem faults drain slots to dead with structured incident
+    records; training completes (no crash) and the fleet revives next
+    episode."""
+    plan = FaultPlan([FaultRule(site="chem", kind="transient",
+                                rate=0.5, fail_attempts=50)], seed=2)
+    tr = _trainer(fault_plan=plan)
+    tr.train(2)
+    st = tr.engine.fault_stats()
+    assert st["n_quarantined"] > 0
+    assert st["n_incidents"] >= st["n_quarantined"]
+    inc = st["incidents"][0]
+    assert inc["site"] == "chem" and inc["action"] == "quarantined"
+    assert inc["worker"] >= 0 and inc["slot"] >= 0 and inc["key"]
+    # quarantine is not contagious: the survivors kept training
+    assert sum(len(b) for b in tr.buffers) > 0
+
+
+def test_exhausted_predict_retries_quarantine_fleet_step():
+    """A predict batch whose per-molecule isolation also exhausts drains
+    the affected slots; the run still completes."""
+    plan = FaultPlan([FaultRule(site="predict", kind="transient",
+                                every=1, fail_attempts=10 ** 6)], seed=0)
+    svc = ResilientService(OracleService(), RetryPolicy(max_retries=1),
+                           fault_plan=plan, sleep=None)
+    tr = _trainer(fault_plan=plan, service=svc)
+    tr.train(1)
+    st = tr.engine.fault_stats()
+    assert st["n_quarantined"] == tr.cfg.n_workers * tr.cfg.mols_per_worker
+    assert all(i["site"] == "predict" and i["action"] == "quarantined"
+               for i in st["incidents"])
+    assert all(len(b) == 0 for b in tr.buffers)   # nothing half-committed
+
+
+def test_pipelined_shard_crash_restarts_bit_identical():
+    """A pipelined enumeration thread dying mid-shard is restarted inline
+    by the supervisor; transitions match the unfaulted pipelined run."""
+    ref = _trainer(rollout="fleet_pipelined", acting="packed_async")
+    ref.train(2)
+
+    plan = FaultPlan([FaultRule(site="pipeline", kind="crash", every=4,
+                                fail_attempts=1)], seed=0)
+    tr = _trainer(fault_plan=plan, rollout="fleet_pipelined",
+                  acting="packed_async")
+    tr.train(2)
+    st = tr.engine.fault_stats()
+    assert st["n_pipeline_restarts"] > 0
+    assert any(i["site"] == "pipeline" and i["action"] == "restarted"
+               for i in st["incidents"])
+    assert _fingerprints(tr) == _fingerprints(ref)

@@ -319,6 +319,48 @@ def test_pipelined_matches_reference_under_zero_candidate_deaths(monkeypatch):
     assert streams[0] == streams[1]
 
 
+def test_quarantined_fleet_revives_clean_next_episode():
+    """Self-healing fleet: slots quarantined by terminal chem faults are
+    revived by the next episode's reset, and once the fault clears the
+    revived fleet's transition stream is BIT-identical to a fresh engine's
+    — quarantine leaves no residue in the engine."""
+    from repro.core.faults import FaultPlan, FaultRule
+
+    plan = FaultPlan([FaultRule(site="chem", kind="transient", rate=1.0,
+                                fail_attempts=1000)], seed=0)
+    engine = RolloutEngine([[MOLS[0], MOLS[1]], [MOLS[2], MOLS[3]]],
+                           EnvConfig(max_steps=3), chem="incremental",
+                           fault_plan=plan)
+    agent = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=1,
+                     network=QNetwork(hidden=(32,)))
+    svc = _OracleService()
+    bufs = [ReplayBuffer(100, seed=2), ReplayBuffer(100, seed=3)]
+    recs = engine.run_episode(agent, svc, RewardConfig(), bufs)
+    st = engine.fault_stats()
+    assert st["n_quarantined"] == 4          # rate=1.0: the whole fleet died
+    assert recs == [] and all(len(b) == 0 for b in bufs)
+    assert all(i["site"] == "chem" and i["action"] == "quarantined"
+               for i in st["incidents"])
+
+    engine.fault_plan = None                 # the fault clears; fleet revives
+
+    def episode(eng):
+        ag = DQNAgent(DQNConfig(epsilon_initial=1.0), seed=7,
+                      network=QNetwork(hidden=(32,)))
+        bs = [ReplayBuffer(100, seed=11), ReplayBuffer(100, seed=12)]
+        rs = eng.run_episode(ag, _OracleService(), RewardConfig(), bs)
+        return rs, [_transitions(b) for b in bs]
+
+    recs2, streams2 = episode(engine)
+    fresh = RolloutEngine([[MOLS[0], MOLS[1]], [MOLS[2], MOLS[3]]],
+                          EnvConfig(max_steps=3), chem="incremental")
+    recs3, streams3 = episode(fresh)
+    assert {(r.worker, r.slot) for r in recs2} == \
+        {(0, 0), (0, 1), (1, 0), (1, 1)}     # every slot is acting again
+    assert streams2 == streams3
+    assert engine.fault_stats()["n_quarantined"] == 4   # no new deaths
+
+
 # ------------------------------------------------------------------ #
 # mesh padding: dead workers beyond the live fleet (engine-level; the
 # trainer-level nd > 1 equivalence lives in tests/multidevice)
