@@ -1,0 +1,275 @@
+"""Serving benchmark: throughput + robustness gates for MoleculeOptService.
+
+Measures an open-loop seeded request stream against the continuously-
+batched router (requests/s, p50/p99 wall latency, terminal-status mix)
+and pins the serve determinism contract:
+
+* TERMINAL — 100% of submitted requests reach a terminal status under an
+  active FaultPlan (predict crashes tripping the breaker, chem crashes
+  quarantining slots, transient request-site bind faults): none lost,
+  none hung.
+* DETERMINISTIC — rerunning the identical seeded stream reproduces every
+  request's (status, steps, degraded_steps, latency, best-reward BYTES).
+* FAULT-FREE BIT-EQUALITY — every request the faults never touched
+  (completed, zero degraded steps) returns a result bit-identical to the
+  unfaulted run's: injected failures are invisible outside their blast
+  radius.
+* 0 RECOMPILES — after warmup (+ capacity-ladder headroom), a churning
+  request mix of mixed budgets/deadlines/molecules holds ZERO XLA
+  recompiles: continuous batching reuses one compiled dispatch shape.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --smoke   # CI gates, W=8
+    PYTHONPATH=src python benchmarks/bench_serve.py           # bigger cell
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # `python benchmarks/bench_serve.py --smoke`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+
+from benchmarks.common import emit, save_results
+
+
+# ------------------------------------------------------------------ #
+def _build_service(n_slots: int, *, faulted: bool, seed: int = 0,
+                   max_queue: int = 64, shed_policy: str = "reject_new",
+                   fault_seed: int = 7, heavy: bool = True,
+                   breaker_cooldown: int = 8):
+    import jax
+
+    from repro.core.agent import QNetwork
+    from repro.core.faults import FaultPlan, FaultRule
+    from repro.predictors.service import (OracleService, ResilientService,
+                                          RetryPolicy)
+    from repro.serving import MoleculeOptService, ServeConfig
+
+    # heavy: long predict-crash bursts keep the breaker open for most of
+    # the run (the equivalence cell's worst case); mild: short bursts so
+    # the measured cell cycles trip -> degraded -> half-open -> recovery
+    # and serves a realistic completed/degraded mix
+    predict_rule = FaultRule(site="predict", kind="crash", every=6,
+                             fail_attempts=30) if heavy else \
+        FaultRule(site="predict", kind="crash", every=9, fail_attempts=4)
+    plan = FaultPlan([
+        predict_rule,
+        FaultRule(site="chem", kind="crash", rate=0.02),
+        FaultRule(site="request", kind="transient", rate=0.1,
+                  fail_attempts=1),
+    ], seed=fault_seed) if faulted else None
+    net = QNetwork(hidden=(64,))
+    params = net.init(jax.random.PRNGKey(0))
+    prop = ResilientService(OracleService(), RetryPolicy(max_retries=1),
+                            fault_plan=plan, sleep=None)
+    svc = MoleculeOptService(
+        net, params, prop, fault_plan=plan,
+        cfg=ServeConfig(n_slots=n_slots, max_queue=max_queue,
+                        shed_policy=shed_policy, epsilon=0.05, seed=seed,
+                        breaker_cooldown=breaker_cooldown))
+    return svc
+
+
+def _signature(svc) -> list[tuple]:
+    """Bit-level per-request outcome fingerprint (sorted by request id)."""
+    return [(r.request_id, r.status, r.steps_used, r.degraded_steps,
+             r.latency, r.best_smiles,
+             None if r.best_reward is None
+             else np.float64(r.best_reward).tobytes())
+            for r in sorted(svc.results, key=lambda r: r.request_id)]
+
+
+def _run_stream(n_slots: int, stream_cfg, *, faulted: bool, **svc_kw):
+    from repro.serving import drive_open_loop, seeded_request_stream
+
+    svc = _build_service(n_slots, faulted=faulted, **svc_kw)
+    drive_open_loop(svc, seeded_request_stream(stream_cfg))
+    return svc
+
+
+# ------------------------------------------------------------------ #
+def equivalence_cell(W: int, n_requests: int) -> dict:
+    """Faulted run twice (determinism) + unfaulted twin (bit-equality of
+    fault-free requests).  No deadlines, ample queue: every difference
+    between the runs is then attributable to the injected faults alone."""
+    from repro.serving import StreamConfig
+
+    scfg = StreamConfig(n_requests=n_requests, rate=2.0, seed=3,
+                        invalid_every=9)
+    f1 = _run_stream(W, scfg, faulted=True)
+    f2 = _run_stream(W, scfg, faulted=True)
+    u = _run_stream(W, scfg, faulted=False)
+
+    all_terminal = (len(f1.results) == n_requests
+                    and len(u.results) == n_requests)
+    deterministic = _signature(f1) == _signature(f2)
+    fault_free = [r for r in f1.results
+                  if r.status == "completed" and r.degraded_steps == 0]
+    bit_identical = bool(fault_free)
+    for r in fault_free:
+        ur = u.result_by_id[r.request_id]
+        if not (ur.status == "completed"
+                and ur.steps_used == r.steps_used
+                and ur.best_smiles == r.best_smiles
+                and np.float64(ur.best_reward).tobytes()
+                == np.float64(r.best_reward).tobytes()):
+            bit_identical = False
+    counts = f1.stats()["status_counts"]
+    return {
+        "all_terminal": all_terminal,
+        "deterministic": deterministic,
+        "fault_free_bit_identical": bit_identical,
+        "n_fault_free": len(fault_free),
+        "n_degraded": counts["degraded"],
+        "n_failed": counts["failed"],
+        "breaker_trips": f1.breaker.stats()["n_trips"],
+        "breaker_recoveries": f1.breaker.stats()["n_recoveries"],
+    }
+
+
+def overload_cell(W: int, n_requests: int) -> dict:
+    """Backpressure under a hot stream: tight queue + deadlines + poisoned
+    requests, faults active.  Sheds and deadline misses MUST happen, and
+    their counts must reproduce exactly on a rerun (virtual-clock
+    admission is deterministic)."""
+    from repro.serving import StreamConfig
+
+    scfg = StreamConfig(n_requests=n_requests, rate=6.0, seed=11,
+                        deadline_frac=0.4, invalid_every=7)
+    o1 = _run_stream(W, scfg, faulted=True, max_queue=6)
+    o2 = _run_stream(W, scfg, faulted=True, max_queue=6)
+    c = o1.stats()["status_counts"]
+    return {
+        "all_terminal": len(o1.results) == n_requests,
+        "deterministic": _signature(o1) == _signature(o2),
+        "shed": c["shed"],
+        "deadline_exceeded": c["deadline_exceeded"],
+        "queue_high_water": o1.queue.depth_high_water,
+    }
+
+
+def throughput_cell(W: int, n_requests: int) -> dict:
+    """Measured serving cell: warmup stream -> capacity-ladder headroom ->
+    recompile mark -> the measured churning stream (mixed budgets,
+    deadlines, invalids, faults active).  Reports requests/s, p50/p99
+    wall latency, terminal-status mix, and recompiles after warmup."""
+    from repro.core.jit_stats import RecompileCounter
+    from repro.serving import (StreamConfig, drive_open_loop, latency_stats,
+                               seeded_request_stream)
+
+    counter = RecompileCounter.install()
+    svc = _build_service(W, faulted=True, max_queue=32, heavy=False,
+                         breaker_cooldown=3)
+    warm = seeded_request_stream(StreamConfig(
+        n_requests=2 * W, rate=4.0, seed=5, prefix="warm"))
+    drive_open_loop(svc, warm)
+    svc.reserve_candidates(int(svc._policy._cap * 1.3))
+    mark = counter.count
+
+    arrivals = seeded_request_stream(StreamConfig(
+        n_requests=n_requests, rate=3.0, seed=17, deadline_frac=0.25,
+        deadline_lo=2.0, deadline_hi=8.0, invalid_every=10))
+    t0 = time.perf_counter()
+    drive_open_loop(svc, arrivals)
+    wall = time.perf_counter() - t0
+
+    measured = [r for r in svc.results
+                if r.request_id.startswith("req-")]
+    lat = latency_stats(measured)
+    c = {s: 0 for s in ("completed", "degraded", "deadline_exceeded",
+                        "shed", "failed")}
+    for r in measured:
+        c[r.status] += 1
+    return {
+        "requests": n_requests,
+        "all_terminal": len(measured) == n_requests,
+        "wall_s": wall,
+        "requests_per_s": n_requests / wall,
+        "p50_latency_ms": lat["p50_wall_ms"],
+        "p99_latency_ms": lat["p99_wall_ms"],
+        "recompiles_after_warmup": counter.delta_since(mark),
+        "service_steps": svc.n_service_steps,
+        "q_dispatches": svc._policy.n_dispatches,
+        **c,
+    }
+
+
+# ------------------------------------------------------------------ #
+def serve_cell(W: int = 8, n_requests: int = 64) -> dict:
+    """The BENCH_*.json serve block: every gate + the measured numbers."""
+    eq = equivalence_cell(W, 4 * W)
+    ov = overload_cell(W, 6 * W)
+    th = throughput_cell(W, n_requests)
+    cell = {
+        "slots": W,
+        "requests": th["requests"],
+        "requests_per_s": round(th["requests_per_s"], 2),
+        "p50_latency_ms": round(th["p50_latency_ms"], 2),
+        "p99_latency_ms": round(th["p99_latency_ms"], 2),
+        "completed": th["completed"],
+        "degraded": th["degraded"],
+        "shed": ov["shed"],
+        "deadline_exceeded": th["deadline_exceeded"],
+        "failed": th["failed"],
+        "recompiles_after_warmup": int(th["recompiles_after_warmup"]),
+        "all_terminal": int(th["all_terminal"] and eq["all_terminal"]
+                            and ov["all_terminal"]),
+        "deterministic": int(eq["deterministic"] and ov["deterministic"]),
+        "fault_free_bit_identical": int(eq["fault_free_bit_identical"]),
+        "breaker_trips": eq["breaker_trips"],
+    }
+    for k, v in sorted(cell.items()):
+        emit(f"serve.smoke.w{W}.{k}", v, "" if isinstance(v, int) else "x")
+    return cell
+
+
+def smoke(W: int = 8) -> None:
+    """The serve-smoke CI job: run every cell, fail loudly on any gate."""
+    cell = serve_cell(W)
+    failures = []
+    if not cell["all_terminal"]:
+        failures.append("a submitted request never reached a terminal status")
+    if not cell["deterministic"]:
+        failures.append("statuses/results not deterministic across reruns")
+    if not cell["fault_free_bit_identical"]:
+        failures.append("fault-free requests differ from the unfaulted run")
+    if cell["recompiles_after_warmup"] != 0:
+        failures.append(f"{cell['recompiles_after_warmup']} recompiles after "
+                        f"warmup (want 0)")
+    if cell["shed"] == 0:
+        failures.append("overload cell shed nothing — backpressure untested")
+    if cell["breaker_trips"] == 0:
+        failures.append("breaker never tripped — degraded path untested")
+    if failures:
+        raise SystemExit("serve smoke FAILED:\n  " + "\n  ".join(failures))
+    print(f"\n[serve-smoke] OK: {cell['requests']} requests at "
+          f"{cell['requests_per_s']:.1f}/s, p50/p99 "
+          f"{cell['p50_latency_ms']:.0f}/{cell['p99_latency_ms']:.0f} ms, "
+          f"0 recompiles, deterministic, fault-free bit-identical")
+
+
+def run(scale: str = "quick") -> None:
+    W, n = (8, 64) if scale == "quick" else (16, 160)
+    serve_cell(W, n)
+    save_results()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gates at W=8 (exit nonzero on any failure)")
+    ap.add_argument("--scale", choices=("quick", "full"), default="quick")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(8)
+    else:
+        run(args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ RESULTS: dict[str, dict] = {}
 BENCH_SNAPSHOT_SCHEMA = "bench-snapshot-v1"
 _BENCH_NAME = re.compile(r"BENCH_PR(\d+)\.json")
 _BENCH_SECTIONS = ("host", "summary", "metrics")
+# the serve section (PR 9) is OPTIONAL — earlier snapshots in the series
+# predate serving — but when present it must carry the full metrics block
+_SERVE_REQUIRED = ("requests_per_s", "p50_latency_ms", "p99_latency_ms",
+                   "completed", "degraded", "shed", "deadline_exceeded",
+                   "failed", "recompiles_after_warmup")
 
 
 class BenchTrajectoryError(ValueError):
@@ -57,6 +62,15 @@ def load_bench_trajectory(root: str = ".") -> list[dict]:
             if not isinstance(data.get(key), dict):
                 raise BenchTrajectoryError(
                     f"{path}: missing or non-object {key!r} section")
+        if "serve" in data:
+            if not isinstance(data["serve"], dict):
+                raise BenchTrajectoryError(
+                    f"{path}: non-object 'serve' section")
+            missing = [k for k in _SERVE_REQUIRED if k not in data["serve"]]
+            if missing:
+                raise BenchTrajectoryError(
+                    f"{path}: serve section missing {missing} — a partial "
+                    f"serve cell must fail the trajectory, not blend in")
         snaps.append({"name": base, "pr": int(m.group(1)), **data})
     snaps.sort(key=lambda s: s["pr"])
     return snaps

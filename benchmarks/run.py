@@ -33,8 +33,10 @@ def bench_json(path: str) -> None:
     benches only — training-free, minutes not hours — plus the measured
     W=512 dense-vs-packed acting H2D cell, the W=8 fault-injection gate
     (training under a seeded FaultPlan bit-identical to fault-free, zero
-    recompiles with retries active) and the W=512 multi-start end-to-end
-    training cell (dataset streaming + prioritized replay).  Finishes by
+    recompiles with retries active), the W=512 multi-start end-to-end
+    training cell (dataset streaming + prioritized replay), and the W=8
+    serving cell (request throughput/latency + the serve determinism
+    gates, written as the snapshot's ``serve`` section).  Finishes by
     printing the per-metric delta table of the whole committed
     BENCH_*.json series, this snapshot included."""
     import json
@@ -42,7 +44,7 @@ def bench_json(path: str) -> None:
 
     import jax
 
-    from benchmarks import bench_env, bench_rollout, bench_train
+    from benchmarks import bench_env, bench_rollout, bench_serve, bench_train
 
     bench_rollout.smoke(16)
     bench_train.smoke(8)
@@ -50,6 +52,7 @@ def bench_json(path: str) -> None:
     fs = bench_train.fault_smoke(8)
     h2d = bench_rollout.measure_acting_h2d(512)
     ms = bench_train.multistart(512)
+    sv = bench_serve.serve_cell(8)
 
     def val(key):
         return RESULTS[key]["value"] if key in RESULTS else None
@@ -79,11 +82,15 @@ def bench_json(path: str) -> None:
             "fault_smoke_n_faults_injected_w8": int(fs["n_faults_injected"]),
             "fault_smoke_n_retries_w8": int(fs["n_retries"]),
             "fault_smoke_bit_identical_w8": int(fs["bit_identical"]),
+            "serve_requests_per_s_w8": sv["requests_per_s"],
+            "serve_p99_latency_ms_w8": sv["p99_latency_ms"],
+            "serve_deterministic_w8": int(sv["deterministic"]),
             "recompiles_after_warmup": max(
                 int(v["value"]) for k, v in RESULTS.items()
                 if k.endswith("recompiles_after_warmup")),
         },
         "metrics": dict(sorted(RESULTS.items())),
+        "serve": sv,
     }
     with open(path, "w") as f:
         json.dump(snapshot, f, indent=2, default=str)

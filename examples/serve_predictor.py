@@ -1,53 +1,82 @@
-"""Serve the property predictors as a batched scoring service.
+"""End-to-end client of the molecule-optimization service.
 
-The inference-side counterpart of the paper's predictor integration: a
-request loop that accepts SMILES batches, featurizes, runs the jit'd
-Alfabet-S/AIMNet-S models (with the §3.6 LRU cache), and reports
-throughput + cache statistics.
+Builds a ``MoleculeOptService`` (the continuously-batched request router
+of docs/serving.md), submits a small mixed request batch — different
+start molecules, objectives, budgets, one deadline-bound request, one
+INVALID SMILES — and prints each request's terminal status and latency.
+Every request gets exactly one structured answer; the poisoned one fails
+at the door without disturbing its co-batched neighbours.
 
-    PYTHONPATH=src python examples/serve_predictor.py --requests 20 --batch 16
+    PYTHONPATH=src python examples/serve_predictor.py            # oracle stub
+    PYTHONPATH=src python examples/serve_predictor.py --trained  # real predictors
 """
 
 import argparse
 import time
 
-import numpy as np
+import jax
 
-from repro.chem.smiles import canonical_smiles, from_smiles
-from repro.data.datasets import antioxidant_dataset, public_antioxidant_dataset
-from repro.predictors import PropertyService
-from repro.predictors.training import ensure_trained
+from repro.core.agent import QNetwork
+from repro.predictors.service import OracleService
+from repro.serving import MoleculeOptService, OptimizeRequest, ServeConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--trained", action="store_true",
+                    help="serve through the trained BDE+IP predictors "
+                         "(trains them on first run) instead of the oracle stub")
     args = ap.parse_args()
 
-    bm, bp, im, ip_, metrics = ensure_trained()
-    service = PropertyService(bm, bp, im, ip_)
-    print(f"predictor accuracy: BDE {metrics['bde']['rel_err_mean']:.2%}, "
-          f"IP {metrics['ip']['rel_err_mean']:.2%} (paper: <5%)")
+    net = QNetwork()
+    params = net.init(jax.random.PRNGKey(0))
+    if args.trained:
+        from repro.predictors import PropertyService
+        from repro.predictors.training import ensure_trained
+        bm, bp, im, ip_, metrics = ensure_trained()
+        properties = PropertyService(bm, bp, im, ip_)
+        print(f"predictor accuracy: BDE {metrics['bde']['rel_err_mean']:.2%}, "
+              f"IP {metrics['ip']['rel_err_mean']:.2%} (paper: <5%)")
+    else:
+        properties = OracleService()
+    svc = MoleculeOptService(
+        net, params, properties,
+        cfg=ServeConfig(n_slots=args.slots, max_queue=16, epsilon=0.05))
 
-    pool = antioxidant_dataset(256) + public_antioxidant_dataset(128)
-    rng = np.random.default_rng(0)
+    requests = [
+        OptimizeRequest("phenol", "C1=CC=CC=C1O", budget=8, seed=1),
+        OptimizeRequest("catechol", "OC1=CC=CC=C1O", budget=8, seed=2),
+        OptimizeRequest("cresol-bde", "CC1=CC=C(O)C=C1",
+                        objective="antioxidant_bde", budget=6, seed=3),
+        OptimizeRequest("anisole-ip", "COC1=CC=CC=C1O",
+                        objective="antioxidant_ip", budget=6, seed=4),
+        OptimizeRequest("hurried", "CC(C)C1=CC=CC=C1O", budget=10,
+                        deadline=9.0, seed=5),
+        OptimizeRequest("poisoned", "this is not a molecule", budget=8),
+    ]
 
-    t0 = time.time()
-    n = 0
-    for req in range(args.requests):
-        idx = rng.integers(0, len(pool), size=args.batch)
-        mols = [pool[i] for i in idx]
-        props = service.predict(mols)
-        n += len(mols)
-        if req < 3:
-            for m, p in list(zip(mols, props))[:2]:
-                print(f"  req{req}: {canonical_smiles(m):40s} "
-                      f"BDE {p.bde:6.1f}  IP {p.ip and round(p.ip, 1)}")
-    dt = time.time() - t0
-    print(f"\n{n} molecules in {dt:.2f}s = {n/dt:.0f} mol/s "
-          f"(cache hit rate {service.cache.hit_rate:.2f}, "
-          f"{service.n_predictor_mols} cold predictions)")
+    t0 = time.perf_counter()
+    for req in requests:
+        verdict = svc.submit(req)
+        print(f"submit {req.request_id:12s} -> {verdict}")
+    svc.run_until_idle()
+    wall = time.perf_counter() - t0
+
+    print(f"\n{'request':12s} {'status':18s} {'steps':>5s} {'lat':>5s} "
+          f"{'wall_ms':>8s}  best")
+    for r in svc.results:
+        best = "-" if r.best_reward is None else \
+            f"{r.best_reward:+.4f}  {r.best_smiles}"
+        err = f"  [{r.error[:44]}]" if r.error else ""
+        print(f"{r.request_id:12s} {r.status:18s} {r.steps_used:5d} "
+              f"{r.latency:5.1f} {r.wall_latency_s * 1e3:8.1f}  {best}{err}")
+
+    st = svc.stats()
+    print(f"\n{len(requests)} requests in {wall:.2f}s | statuses "
+          f"{st['status_counts']} | {st['n_service_steps']} service steps, "
+          f"{st['n_q_dispatches']} Q dispatches, breaker "
+          f"{st['breaker']['state']}")
 
 
 if __name__ == "__main__":

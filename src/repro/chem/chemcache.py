@@ -73,6 +73,7 @@ class ChemCache:
         self.hits = 0
         self.misses = 0
         self.relabel_misses = 0      # canonical hit, different atom labelling
+        self.evictions = 0           # LRU capacity evictions (serve dashboards)
 
     def __len__(self) -> int:
         with self._lock:
@@ -123,6 +124,7 @@ class ChemCache:
             self._data[key] = entry
             if len(self._data) > self.capacity:
                 self._data.popitem(last=False)
+                self.evictions += 1
 
     # ------------------------------------------------------------ #
     @property
@@ -140,8 +142,10 @@ class ChemCache:
                 "hits": self.hits,
                 "misses": self.misses,
                 "relabel_misses": self.relabel_misses,
+                "lookups": total,
                 "hit_rate": self.hits / total if total else 0.0,
                 "entries": len(self._data),
+                "evictions": self.evictions,
             }
 
     def reset_stats(self) -> None:
@@ -149,3 +153,4 @@ class ChemCache:
             self.hits = 0
             self.misses = 0
             self.relabel_misses = 0
+            self.evictions = 0

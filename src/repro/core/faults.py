@@ -2,7 +2,7 @@
 
 One injection surface — a seeded :class:`FaultPlan` — shared by tests,
 benches, and the ``launch/verify.py`` fault scenarios, instead of ad-hoc
-monkeypatching per harness.  Three hook sites:
+monkeypatching per harness.  The hook sites:
 
 ``predict``      ``ResilientService`` consults the plan before each
                  underlying ``PropertyService.predict`` call (serial —
@@ -14,6 +14,12 @@ monkeypatching per harness.  Three hook sites:
                  of thread interleaving).
 ``checkpoint``   ``CheckpointManager.save`` consults the plan before each
                  write (serial, counter-scheduled).
+``request``      serve site — ``serving.MoleculeOptService`` consults the
+                 plan per *request* at bind time (content-keyed on the
+                 request id, so the faulted request set is independent of
+                 admission order).  Transient → the bind is retried next
+                 service step; crash → the request fails with an Incident,
+                 its co-batched neighbours untouched.
 
 Fault taxonomy (what the hooks raise):
 
@@ -74,6 +80,7 @@ class Incident:
     episode: int
     step: int
     site: str          # "predict" | "chem" | "checkpoint" | "pipeline"
+                       # | serve sites: "request" | "parse"
     worker: int        # -1 when not slot-attributable
     slot: int          # -1 when not slot-attributable
     key: str           # molecule canonical key / path / "" when n/a
@@ -93,7 +100,7 @@ class FaultRule:
     """One injection rule.
 
     ``site``           hook site this rule arms ("predict" / "chem" /
-                       "checkpoint").
+                       "checkpoint" / "pipeline" / "request").
     ``kind``           "transient" | "timeout" | "crash" (what is raised).
     ``every``          serial sites: fault every Nth logical call
                        (1-based: ``every=3`` faults calls 3, 6, 9, ...).
@@ -217,6 +224,11 @@ class FaultPlan:
             if seen < rule.fail_attempts:
                 st.key_attempts[key] = seen + 1
                 self._raise(rule, st, f"key {key[:40]!r}, attempt {seen + 1}")
+
+    def has_rule(self, site: str) -> bool:
+        """Whether any rule arms ``site`` — lets a hook skip key hashing
+        entirely when the site is cold."""
+        return site in self._by_site
 
     # -- accounting ---------------------------------------------------------
 

@@ -116,6 +116,9 @@ class Slot:
     cand_fps_packed: np.ndarray | None = None  # u8[C, FP_BITS/8] (same rows)
     pending: Transition | None = None         # waiting for next-state candidates
     best: tuple[float, Molecule] | None = None
+    # per-slot reward override (a serving request's objective); ``None``
+    # falls back to the fleet-wide reward_cfg passed to step()
+    objective: object | None = None
 
     def steps_frac(self, max_steps: int) -> float:
         return self.steps_left / max_steps
@@ -664,12 +667,16 @@ class RolloutEngine:
             s.current = act.result
             s.steps_left -= 1
             done = s.steps_left <= 0
-            if callable(reward_cfg):
+            # per-slot objective (a serving request's reward config) wins
+            # over the fleet-wide one — co-batched requests may optimise
+            # different objectives without perturbing each other
+            rc = s.objective if s.objective is not None else reward_cfg
+            if callable(rc):
                 # pluggable objective (e.g. QED / PlogP, Appendix D)
-                reward = reward_cfg(pr, s.initial, s.current, s.steps_left)
+                reward = rc(pr, s.initial, s.current, s.steps_left)
             else:
                 reward = compute_reward(
-                    reward_cfg, bde=pr.bde, ip=pr.ip,
+                    rc, bde=pr.bde, ip=pr.ip,
                     initial=s.initial, current=s.current, steps_left=s.steps_left,
                 )
             if s.best is None or reward > s.best[0]:
@@ -872,6 +879,48 @@ class RolloutEngine:
         while not self.done:
             all_recs.extend(step(policy, service, reward_cfg, buffers))
         return all_recs
+
+    # ------------------------------------------------------------ #
+    # continuous-batching slot control (the serving router's hooks)
+    # ------------------------------------------------------------ #
+    def bind_slot(self, worker: int, molecule: Molecule, steps_left: int,
+                  objective=None) -> Slot:
+        """Install a FRESH episode in one worker's slot batch without
+        touching any sibling — the serving tier's continuous-batching
+        rebind: a finished/dead/reclaimed slot is immediately handed the
+        next queued request while co-batched slots keep stepping.
+
+        The new slot's candidates are enumerated right here (a one-slot
+        chemistry batch — per-slot chemistry is composition-independent,
+        so this is bit-identical to enumerating it with the fleet), which
+        means a poisoned start molecule quarantines at bind time exactly
+        like a mid-episode chem fault: Incident + empty candidate set,
+        siblings untouched.  ``objective`` (a ``RewardConfig`` or callable)
+        overrides the fleet reward for this slot only."""
+        if not 0 <= worker < self.n_live_workers:
+            raise ValueError(
+                f"worker {worker} out of range [0, {self.n_live_workers})")
+        s = Slot(worker=worker, index=0, initial=molecule, current=molecule,
+                 steps_left=int(steps_left), objective=objective)
+        self.workers[worker] = [s]
+        self.worker_initials[worker] = [molecule]
+        if self._enumerated:
+            self._apply_enum([s], self._compute_enum([molecule]))
+        else:
+            # first bind on a fresh engine: bring every pre-existing live
+            # slot in with the same deferred pass the first step() would run
+            self._enumerated = True
+            self._enumerate_all()
+        return s
+
+    def kill_slot(self, worker: int) -> None:
+        """Reclaim a worker's slots NOW (deadline passed, request
+        cancelled): drop any in-flight transition and stop acting.  The
+        dense batch simply loses the rows — jit shapes are unchanged and
+        siblings never notice (the ragged-fleet contract)."""
+        for s in self.workers[worker]:
+            s.pending = None
+            s.steps_left = 0
 
     # ------------------------------------------------------------ #
     def chem_stats(self) -> dict:

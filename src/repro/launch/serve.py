@@ -43,18 +43,29 @@ def main() -> None:
 
     step = jax.jit(lambda p, c, t: serve_step(p, cfg, c, t))
 
+    # warmup: one decode step on a throwaway cache compiles the [B, 1]
+    # decode shape OFF the clock (the timed loop below must measure
+    # steady-state decode, not the XLA trace)
+    warm_logits, _ = step(params, init_cache(cfg, B, total), prompt[:, :1])
+    jax.block_until_ready(warm_logits)
+
     # prefill (sequentially through the decode path)
     for t in range(args.prompt_len):
         logits, cache = step(params, cache, prompt[:, t : t + 1])
 
+    # drain the async dispatch queue before starting the clock — the
+    # prefill's last step is still in flight otherwise, and the first
+    # argmax below would silently charge it to the decode timing
+    logits = jax.block_until_ready(logits)
     out = []
-    t0 = time.time()
     tok = np.asarray(np.argmax(np.asarray(logits), axis=-1), np.int32)
+    t0 = time.perf_counter()
     for _ in range(args.new_tokens):
         out.append(tok[:, 0])
         logits, cache = step(params, cache, tok)
         tok = np.asarray(np.argmax(np.asarray(logits), axis=-1), np.int32)
-    dt = time.time() - t0
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
     toks = B * args.new_tokens
     print(f"arch={cfg.name} batch={B} decode {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s on CPU)")

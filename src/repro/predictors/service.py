@@ -222,6 +222,43 @@ class PropertyService:
         return self._buckets[-1]
 
 
+class DegradedPropertyService:
+    """The last-known-good property tier a TRIPPED circuit breaker serves
+    from (serving/breaker.py): per molecule, the primary service's LRU
+    cache when it holds the answer, the deterministic oracle stub
+    otherwise.  Never raises, never touches the (presumed sick) primary
+    predictors — responses routed through here are flagged ``degraded``
+    by the serving layer.
+
+    ``primary`` may be a ``PropertyService`` (its ``cache`` is consulted),
+    a ``ResilientService`` around one (attribute delegation exposes the
+    cache), or any stub without a cache (pure oracle fallback).
+    """
+
+    def __init__(self, primary=None, stub=None):
+        self.primary_cache = getattr(primary, "cache", None)
+        self.stub = stub if stub is not None else OracleService()
+        self.n_cache_serves = 0
+        self.n_stub_serves = 0
+
+    def predict(self, mols: Sequence[Molecule]) -> list[Properties]:
+        out: list[Properties] = []
+        for m in mols:
+            hit = (self.primary_cache.get(m.iso_key())
+                   if self.primary_cache is not None else None)
+            if hit is not None:
+                self.n_cache_serves += 1
+                out.append(hit)
+            else:
+                self.n_stub_serves += 1
+                out.append(self.stub.predict([m])[0])
+        return out
+
+    def stats(self) -> dict:
+        return {"n_cache_serves": self.n_cache_serves,
+                "n_stub_serves": self.n_stub_serves}
+
+
 # ------------------------------------------------------------------ #
 # fault tolerance: bounded retries + deterministic backoff + timeout
 # ------------------------------------------------------------------ #

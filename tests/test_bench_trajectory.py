@@ -82,6 +82,46 @@ def test_non_object_snapshot_raises(tmp_path):
 
 
 # ------------------------------------------------------------------ #
+# the serve section (PR 9): optional for old snapshots, strict when present
+# ------------------------------------------------------------------ #
+def _serve_cell(**over) -> dict:
+    cell = {"requests_per_s": 55.0, "p50_latency_ms": 480.0,
+            "p99_latency_ms": 990.0, "completed": 15, "degraded": 16,
+            "shed": 22, "deadline_exceeded": 11, "failed": 10,
+            "recompiles_after_warmup": 0}
+    cell.update(over)
+    return cell
+
+
+def test_serve_section_is_optional_for_old_snapshots(tmp_path):
+    _write(tmp_path, "BENCH_PR6.json", _snapshot(x=1))           # pre-serving
+    with_serve = _snapshot(x=2)
+    with_serve["serve"] = _serve_cell()
+    _write(tmp_path, "BENCH_PR9.json", with_serve)
+    snaps = load_bench_trajectory(str(tmp_path))
+    assert "serve" not in snaps[0]
+    assert snaps[1]["serve"]["requests_per_s"] == 55.0
+
+
+def test_partial_serve_section_raises(tmp_path):
+    bad = _snapshot(x=1)
+    bad["serve"] = _serve_cell()
+    del bad["serve"]["p99_latency_ms"], bad["serve"]["shed"]
+    _write(tmp_path, "BENCH_PR9.json", bad)
+    with pytest.raises(BenchTrajectoryError,
+                       match=r"serve section missing.*p99_latency_ms"):
+        load_bench_trajectory(str(tmp_path))
+
+
+def test_non_object_serve_section_raises(tmp_path):
+    bad = _snapshot(x=1)
+    bad["serve"] = [1, 2]
+    _write(tmp_path, "BENCH_PR9.json", bad)
+    with pytest.raises(BenchTrajectoryError, match="non-object 'serve'"):
+        load_bench_trajectory(str(tmp_path))
+
+
+# ------------------------------------------------------------------ #
 # the diff
 # ------------------------------------------------------------------ #
 def test_diff_rows_and_delta_pct(tmp_path):

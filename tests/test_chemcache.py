@@ -253,3 +253,82 @@ def test_relabel_twin_never_replaces_incumbent_under_contention(ref):
     assert st["relabel_misses"] > 0
     final = cache.get(mol)
     assert final is not None and final.signature == incumbent_sig
+
+
+# ------------------------------------------------------------------ #
+# serve-pool coherence (ISSUE-9 satellite): the serving tier shares ONE
+# ChemCache across the request router's worker pool and reads stats()
+# for its dashboards — lookups/evictions must stay coherent under that
+# regime, not just under the training pipeline threads.
+# ------------------------------------------------------------------ #
+def test_lookup_and_eviction_counters_single_threaded(ref):
+    mols, entries = ref
+    cache = ChemCache(capacity=4)
+    for i, m in enumerate(mols):            # 8 distinct keys into 4 slots
+        assert cache.get(m) is None
+        cache.put(m, *entries[i])
+    st = cache.stats()
+    assert st["lookups"] == st["hits"] + st["misses"] + st["relabel_misses"]
+    assert st["lookups"] == len(mols) and st["misses"] == len(mols)
+    assert st["evictions"] == len(mols) - 4 and len(cache) == 4
+    cache.reset_stats()
+    st = cache.stats()
+    assert st["lookups"] == 0 and st["evictions"] == 0
+
+
+def test_stat_coherence_under_serve_thread_pool(ref):
+    """The serve regime: request batches fanned out over a thread pool,
+    each doing lookup-or-fill against the shared cache, while a stats
+    reader polls.  Every snapshot must satisfy
+    ``lookups == hits + misses + relabel_misses`` with monotone lookups,
+    and the final eviction count must be consistent with the bound."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    mols, entries = ref
+    cache = ChemCache(capacity=5)           # < distinct keys: churn
+
+    def serve_batch(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(40):
+            i = int(rng.integers(len(mols)))
+            e = cache.get(mols[i])
+            if e is None:
+                acts, packed = entries[i]
+                cache.put(mols[i], acts, packed.copy())
+            elif not np.array_equal(e.packed_fps, entries[i][1]):
+                raise AssertionError("served entry does not match its key")
+
+    with ThreadPoolExecutor(max_workers=N_THREADS) as pool:
+        futures = [pool.submit(serve_batch, s) for s in range(16)]
+        prev = 0
+        while any(not f.done() for f in futures):
+            st = cache.stats()
+            total = st["hits"] + st["misses"] + st["relabel_misses"]
+            assert st["lookups"] == total
+            assert st["lookups"] >= prev    # monotone under concurrency
+            prev = st["lookups"]
+            if st["lookups"]:
+                assert st["hit_rate"] == st["hits"] / st["lookups"]
+        for f in futures:
+            f.result()                      # surface worker exceptions
+
+    st = cache.stats()
+    assert st["lookups"] == 16 * 40
+    assert st["evictions"] > 0 and len(cache) <= 5
+    # a warm over-provisioned cache under the same pool never evicts
+    warm = ChemCache(capacity=64)
+    errors, counts = [], [0] * N_THREADS
+    with ThreadPoolExecutor(max_workers=N_THREADS) as pool:
+        list(pool.map(lambda s: _hammer(warm, mols, entries, errors,
+                                        counts, s, _NoBarrier()),
+                      range(N_THREADS)))
+    assert not errors, errors[0]
+    wst = warm.stats()
+    assert wst["lookups"] == sum(counts)
+    assert wst["evictions"] == 0
+    assert wst["hits"] > wst["misses"] >= len(mols)
+
+
+class _NoBarrier:
+    def wait(self):
+        return None
