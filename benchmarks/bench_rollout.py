@@ -26,7 +26,11 @@ dense acting representations.
 pipelined path with packed acting, randomly-initialised predictors (no
 training needed), and FAILS if any XLA compile happens after warmup, if
 the dispatch count is not exactly one per step, or if packed acting ships
-more than 0.05x the dense acting H2D bytes per step.  The gate is
+more than 0.05x the dense acting H2D bytes per step.  The gate also runs
+a mixed-scenario cell (heterogeneous objectives cycled across the fleet
+through the vectorized reward layer) which must hold the same
+zero-recompile / one-dispatch bar and reports its steps/s overhead vs the
+homogeneous fleet.  The gate is
 mesh-size-agnostic: CI also runs it under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (the
 multidevice-smoke job), which shards the fleet over nd=2 host devices and
@@ -132,11 +136,12 @@ def _measure(tr: DistributedTrainer, svc: PropertyService, counter,
 
 
 def _trainer(W: int, mode: str, mols, svc, rcfg, net,
-             acting: str = "packed") -> DistributedTrainer:
+             acting: str = "packed", scenarios=None) -> DistributedTrainer:
     cfg = TrainerConfig(
         n_workers=W, mols_per_worker=1, episodes=1, sync_mode="episode",
         rollout=mode, acting=acting, train_batch_size=8, max_candidates=16,
-        dqn=DQNConfig(), env=EnvConfig(max_steps=MAX_STEPS), seed=0)
+        dqn=DQNConfig(), env=EnvConfig(max_steps=MAX_STEPS), seed=0,
+        scenarios=scenarios)
     return DistributedTrainer(cfg, mols, svc, rcfg, network=net)
 
 
@@ -256,6 +261,29 @@ def smoke(W: int = 16) -> None:
          int(m_d["acting_h2d_bytes_per_step"]), "B")
     emit(f"rollout.smoke.w{W}.acting_h2d_ratio", round(h2d_ratio, 4), "frac",
          "packed / dense acting bytes per step; gate: <= 0.05")
+
+    # mixed-scenario cell (PR 10): the SAME pipelined fleet, heterogeneous
+    # objectives cycled across workers through the fleet-vectorized reward
+    # layer.  The reward layer is NumPy-side, so the shape-discipline gate
+    # must hold unchanged (0 recompiles after warmup, 1 Q dispatch/step);
+    # the steps/s ratio vs the homogeneous fleet is the layer's overhead.
+    mix = ("antioxidant", "qed", "plogp", "antioxidant_novel")
+    svc_m = _uncached_service(svc)
+    tr_m = _trainer(W, "fleet_pipelined", mols, svc_m, rcfg, net,
+                    acting="packed", scenarios=mix)
+    m_m = _measure(tr_m, svc_m, counter, warmup=2, episodes=2)
+    mixed_overhead = (m["steps_per_s"] / max(m_m["steps_per_s"], 1e-9)) - 1.0
+    emit(f"rollout.smoke.w{W}.mixed.steps_per_s",
+         round(m_m["steps_per_s"], 3), "steps/s",
+         f"scenarios={','.join(mix)} cycled across {W} workers")
+    emit(f"rollout.smoke.w{W}.mixed.recompiles_after_warmup",
+         m_m["recompiles"], "compiles", "gate: must be 0")
+    emit(f"rollout.smoke.w{W}.mixed.q_dispatches_per_step",
+         round(m_m["q_dispatches_per_step"], 2), "calls", "gate: must be 1.0")
+    emit(f"rollout.smoke.w{W}.mixed_overhead_frac",
+         round(mixed_overhead, 4), "frac",
+         "mixed-fleet slowdown vs homogeneous (steps/s ratio - 1)")
+
     if warmup_compiles <= 0:
         raise SystemExit("smoke self-check failed: warmup compiled nothing — "
                          "the recompile counter is not observing this process")
@@ -270,9 +298,19 @@ def smoke(W: int = 16) -> None:
         raise SystemExit(
             f"FAIL: packed acting ships {h2d_ratio:.4f}x the dense H2D "
             f"bytes/step (gate: <= 0.05)")
+    if m_m["recompiles"] != 0:
+        raise SystemExit(
+            f"FAIL: {m_m['recompiles']} XLA compile(s) during the measured "
+            f"mixed-scenario episodes (objectives leaked into jit shapes)")
+    if m_m["q_dispatches_per_step"] != 1.0:
+        raise SystemExit(
+            f"FAIL: mixed fleet made {m_m['q_dispatches_per_step']} Q "
+            f"dispatches/step (expected 1)")
     print(f"SMOKE PASS: W={W} on {jax.device_count()} device(s), "
-          f"{warmup_compiles} warmup compiles, 0 recompiles after warmup, "
-          f"1 Q dispatch/step, packed/dense acting H2D ratio {h2d_ratio:.4f}")
+          f"{warmup_compiles} warmup compiles, 0 recompiles after warmup "
+          f"(homogeneous AND mixed-scenario), 1 Q dispatch/step, "
+          f"packed/dense acting H2D ratio {h2d_ratio:.4f}, "
+          f"mixed-fleet overhead {mixed_overhead:+.1%}")
 
 
 def measure_acting_h2d(W: int = 512, episodes: int = 1) -> dict:

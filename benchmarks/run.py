@@ -65,6 +65,10 @@ def bench_json(path: str) -> None:
         "summary": {
             "rollout_steps_per_s_w16_pipelined_packed":
                 val("rollout.smoke.w16.steps_per_s"),
+            "rollout_steps_per_s_w16_mixed_scenarios":
+                val("rollout.smoke.w16.mixed.steps_per_s"),
+            "mixed_scenario_overhead_frac_w16":
+                val("rollout.smoke.w16.mixed_overhead_frac"),
             "learner_updates_per_s_w8_packed_pipelined":
                 val("train.smoke.w8.updates_per_s"),
             "acting_h2d_bytes_per_step_w512_dense":

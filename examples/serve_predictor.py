@@ -51,6 +51,10 @@ def main() -> None:
                         objective="antioxidant_bde", budget=6, seed=3),
         OptimizeRequest("anisole-ip", "COC1=CC=CC=C1O",
                         objective="antioxidant_ip", budget=6, seed=4),
+        # a non-antioxidant scenario: any registry name is requestable
+        # (configs/scenarios.py — the same table the trainer mixes)
+        OptimizeRequest("druglike", "CC(=O)NC1=CC=C(O)C=C1",
+                        objective="qed", budget=6, seed=6),
         OptimizeRequest("hurried", "CC(C)C1=CC=CC=C1O", budget=10,
                         deadline=9.0, seed=5),
         OptimizeRequest("poisoned", "this is not a molecule", budget=8),

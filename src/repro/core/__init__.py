@@ -11,7 +11,9 @@ Distributed deep-Q molecular optimisation with:
     fingerprints, LRU property cache) living in repro.chem / repro.predictors.
 
 Layout:
-  reward.py       Eq. 1 + min-max normalisation bounds from the dataset
+  reward.py       Eq. 1 + min-max normalisation bounds from the dataset,
+                  plus term-composed objectives (ObjectiveSpec →
+                  CompiledObjective) behind configs/scenarios.py's registry
   agent.py        Q-network (fingerprint MLP), double-DQN loss, eps-greedy
   replay.py       bit-packed SoA replay ring buffer (vectorized sampling,
                   packed uint8 batches for the device-side unpack)
@@ -30,7 +32,11 @@ Layout:
                   fleet and the crash-resume matrix
 """
 
-from repro.core.reward import RewardConfig, compute_reward, INVALID_CONFORMER_REWARD
+from repro.core.reward import (
+    RewardConfig, compute_reward, INVALID_CONFORMER_REWARD,
+    ObjectiveSpec, TermSpec, CompiledObjective, evaluate_rewards,
+    REWARD_TERMS,
+)
 from repro.core.agent import QNetwork, DQNAgent, DQNConfig
 from repro.core.replay import ReplayBuffer, Transition
 from repro.core.rollout import CHEM_MODES, RolloutEngine, StepRecord, AgentFleetPolicy
@@ -49,6 +55,8 @@ __all__ = [
     "FaultError", "FaultPlan", "FaultRule", "FaultTimeout", "Incident",
     "TransientFault",
     "RewardConfig", "compute_reward", "INVALID_CONFORMER_REWARD",
+    "ObjectiveSpec", "TermSpec", "CompiledObjective", "evaluate_rewards",
+    "REWARD_TERMS",
     "QNetwork", "DQNAgent", "DQNConfig",
     "ReplayBuffer", "Transition",
     "RolloutEngine", "StepRecord", "AgentFleetPolicy", "CHEM_MODES",

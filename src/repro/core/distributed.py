@@ -174,6 +174,15 @@ class TrainerConfig:
                                       # name); None = fixed ctor molecules
     dataset_size: int | None = None   # pool size (None: dataset default)
     dataset_seed: int | None = None   # pool+cursor seed (None: cfg.seed)
+    scenarios: tuple[str, ...] | None = None
+                                      # heterogeneous scenario fleet: registry
+                                      # names (configs/scenarios) cycled across
+                                      # workers — worker w optimises
+                                      # scenarios[w % len]; Eq.1-family names
+                                      # take their bde/ip bounds from the
+                                      # trainer's reward_cfg.  None = every
+                                      # worker runs reward_cfg (the seed path,
+                                      # bit-identical to pre-scenario builds)
     pipeline_threads: int | None = None  # fleet_pipelined host pool (None: auto)
     dqn: DQNConfig = field(default_factory=lambda: DQNConfig(epsilon_decay=0.97))
     env: EnvConfig = field(default_factory=EnvConfig)
@@ -439,6 +448,21 @@ class DistributedTrainer:
             pad_workers_to=self.n_padded_workers,
             packed_states=cfg.acting != "dense",
             fault_plan=fault_plan)
+        # heterogeneous scenario fleet: compile ONE objective per worker
+        # (fresh instances — the novelty term's visit counts are per-worker
+        # state) and install them as the engine's per-slot defaults.  The
+        # per_worker rollout path passes the same instances as each env's
+        # reward_cfg, so every mode sees identical objective resolution.
+        self.worker_objectives = None
+        self.scenario_names: tuple[str, ...] | None = None
+        if cfg.scenarios:
+            from repro.configs.scenarios import (
+                compile_worker_objectives, worker_scenarios)
+            base = reward_cfg if isinstance(reward_cfg, RewardConfig) else None
+            self.scenario_names = tuple(worker_scenarios(cfg.scenarios, W))
+            self.worker_objectives = compile_worker_objectives(
+                cfg.scenarios, W, base=base)
+            self.engine.set_worker_objectives(self.worker_objectives)
         self._envs: list[BatchedEnv] | None = None  # built lazily (legacy path)
         # storage truncates where sample() would anyway (cfg.max_candidates),
         # so the SoA candidate axis never outgrows what training can see
@@ -756,7 +780,11 @@ class DistributedTrainer:
             return records
         records = []
         for w, env in enumerate(self.envs):
-            recs = env.run_episode(self._views[w], self.service, self.reward_cfg,
+            # scenario fleets hand each worker ITS compiled objective (the
+            # same instance the fleet engine stamps on that worker's slots)
+            rc = self.worker_objectives[w] \
+                if self.worker_objectives is not None else self.reward_cfg
+            recs = env.run_episode(self._views[w], self.service, rc,
                                    self.buffers[w])
             for r in recs:  # single-worker envs stamp worker=0; fix up
                 r.worker = w
@@ -1037,6 +1065,14 @@ class DistributedTrainer:
         if self._dataset_stream is not None:
             for k, v in self._dataset_stream.state_dict().items():
                 flat[f"dataset/{k}"] = v
+        if self.worker_objectives is not None:
+            # scenario objectives carry mutable state (novelty visit
+            # counts) — snapshot it per worker so a resumed mixed fleet
+            # keeps the exact intrinsic-bonus schedule
+            for w, obj in enumerate(self.worker_objectives):
+                flat[f"scenario/{w}"] = np.frombuffer(json.dumps(
+                    obj.state_dict(), sort_keys=True).encode(),
+                    np.uint8).copy()
         return flat
 
     def load_state_dict(self, flat) -> None:
@@ -1097,6 +1133,17 @@ class DistributedTrainer:
                     "trainer streams episode starts but the checkpoint "
                     "carries no dataset cursor")
             self._dataset_stream.load_state_dict(sub)
+        if self.worker_objectives is not None:
+            # cfg.scenarios rides the config fingerprint, so a matching
+            # checkpoint always carries every worker's scenario state
+            for w, obj in enumerate(self.worker_objectives):
+                key = f"scenario/{w}"
+                if key not in flat:
+                    raise CheckpointError(
+                        f"trainer runs a scenario fleet but the checkpoint "
+                        f"carries no objective state for worker {w}")
+                obj.load_state_dict(json.loads(
+                    bytes(np.asarray(flat[key], np.uint8)).decode()))
 
     def save_checkpoint(self, manager, step: int | None = None) -> int:
         """Snapshot into a ``repro.checkpoint.CheckpointManager`` (flat

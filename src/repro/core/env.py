@@ -66,10 +66,17 @@ class BatchedEnv:
         self,
         agent,
         service,
-        reward_cfg: RewardConfig,
+        reward_cfg: "RewardConfig | object",
         buffer: ReplayBuffer | None = None,
     ) -> list[StepRecord]:
-        """One lockstep environment step for every live slot."""
+        """One lockstep environment step for every live slot.
+
+        ``reward_cfg`` accepts any fleet objective the engine resolves:
+        a ``RewardConfig`` (Eq. 1 scalar path), an ``ObjectiveSpec`` /
+        registry scenario name (compiled + vectorised), a
+        ``CompiledObjective``, or an arbitrary callable
+        ``f(props, initial, current, steps_left) -> float``.
+        """
         return self._engine.step(
             as_fleet_policy(agent), service, reward_cfg, [buffer])
 
@@ -77,7 +84,7 @@ class BatchedEnv:
         self,
         agent,
         service,
-        reward_cfg: RewardConfig,
+        reward_cfg: "RewardConfig | object",
         buffer: ReplayBuffer | None = None,
     ) -> list[StepRecord]:
         """Reset + roll a full episode; returns ALL step records (the

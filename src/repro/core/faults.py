@@ -80,6 +80,8 @@ class Incident:
     episode: int
     step: int
     site: str          # "predict" | "chem" | "checkpoint" | "pipeline"
+                       # | "reward" (a custom/callable objective raised;
+                       #   slot quarantined, fleet survives)
                        # | serve sites: "request" | "parse"
     worker: int        # -1 when not slot-attributable
     slot: int          # -1 when not slot-attributable

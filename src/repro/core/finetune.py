@@ -38,8 +38,16 @@ def fine_tune(
     max_candidates: int = 64,
     env_cfg: EnvConfig = EnvConfig(),
     seed: int = 0,
+    scenario: "str | object | None" = None,
 ) -> DQNAgent:
-    """Returns a NEW agent fine-tuned on ``molecule`` (general untouched)."""
+    """Returns a NEW agent fine-tuned on ``molecule`` (general untouched).
+
+    ``scenario`` optionally overrides the objective: a registry name or an
+    ``ObjectiveSpec`` is compiled ONCE (fresh novelty state for this run)
+    against ``reward_cfg``'s Eq. 1 bounds; any other object is used as the
+    engine objective directly.  ``None`` keeps the plain ``reward_cfg``
+    scalar path.
+    """
     cfg = replace(
         general_agent.cfg,
         epsilon_initial=epsilon_initial,
@@ -51,11 +59,22 @@ def fine_tune(
     agent.opt_state = agent.opt.init(agent.params)
     agent.epsilon = epsilon_initial
 
+    objective: object = reward_cfg
+    if scenario is not None:
+        from repro.core.reward import ObjectiveSpec
+        if isinstance(scenario, str):
+            from repro.configs.scenarios import get_scenario
+            objective = get_scenario(scenario).compile(base=reward_cfg)
+        elif isinstance(scenario, ObjectiveSpec):
+            objective = scenario.compile(base=reward_cfg)
+        else:
+            objective = scenario
+
     env = BatchedEnv([molecule], env_cfg, seed=seed + 1)
     buffer = ReplayBuffer(capacity=4000, seed=seed + 2)
 
     for _ in range(episodes):
-        env.run_episode(agent, service, reward_cfg, buffer)
+        env.run_episode(agent, service, objective, buffer)
         if len(buffer) >= train_batch_size:
             for _ in range(updates_per_episode):
                 agent.train_step(buffer.sample(train_batch_size, max_candidates))

@@ -66,7 +66,8 @@ from repro.chem.fingerprint import (
 from repro.chem.molecule import ALLOWED_RING_SIZES, Molecule
 from repro.core.faults import FaultError, Incident, TransientFault
 from repro.core.replay import FP_BYTES, ReplayBuffer, Transition, unpack_fp
-from repro.core.reward import RewardConfig, compute_reward
+from repro.core.reward import (
+    CompiledObjective, ObjectiveSpec, RewardConfig, evaluate_rewards)
 
 STATE_DIM = FP_BITS + 1  # fingerprint ++ steps-left feature
 
@@ -182,6 +183,12 @@ def as_fleet_policy(obj) -> FleetPolicy:
     return AgentFleetPolicy(obj)
 
 
+# row marker of the fleet reward layer: the slot's objective raised while
+# evaluating this row — the slot quarantines (Incident site "reward"), its
+# co-batched neighbours keep their rewards
+_REWARD_FAULT = object()
+
+
 @dataclass(frozen=True)
 class _EnumFailure:
     """Sentinel a failed per-molecule chemistry computation returns instead
@@ -232,6 +239,16 @@ class RolloutEngine:
             self.worker_initials += [
                 [] for _ in range(pad_workers_to - self.n_live_workers)]
         self.n_workers = len(self.worker_initials)
+        # per-worker default objectives (the heterogeneous-scenario fleet):
+        # stamped onto every Slot at reset(); None falls through to the
+        # reward_cfg argument of step()/run_episode().  A serving bind_slot
+        # objective still wins per slot.
+        self.worker_objectives: list[object | None] = [None] * self.n_workers
+        # lazy (worker, spec-or-name) -> CompiledObjective memo for raw
+        # ObjectiveSpec / registry-name objectives handed straight to the
+        # engine — per-WORKER instances, never shared (the novelty term's
+        # counts are worker-scoped state)
+        self._compiled_objectives: dict[tuple[int, object], CompiledObjective] = {}
         self.workers: list[list[Slot]] = []
         self.n_env_steps = 0
         self.chem_enum_s = 0.0   # host seconds in candidate enumeration
@@ -272,10 +289,28 @@ class RolloutEngine:
         pad = self.worker_initials[self.n_live_workers:]
         self.worker_initials = [list(ms) for ms in worker_molecules] + pad
 
+    def set_worker_objectives(self, objectives: Sequence[object | None]) -> None:
+        """Install per-worker default objectives (the scenario mix): one
+        entry per LIVE worker — a ``RewardConfig``, ``ObjectiveSpec``,
+        compiled objective, callable, or ``None`` (fall through to the
+        fleet-wide ``reward_cfg``).  Takes effect on current slots and at
+        every subsequent ``reset()``; mesh-padding workers stay ``None``."""
+        objectives = list(objectives)
+        if len(objectives) != self.n_live_workers:
+            raise ValueError(
+                f"expected {self.n_live_workers} live workers' objectives, "
+                f"got {len(objectives)}")
+        self.worker_objectives = objectives + \
+            [None] * (self.n_workers - self.n_live_workers)
+        for w, slots in enumerate(self.workers):
+            for s in slots:
+                s.objective = self.worker_objectives[w]
+
     def reset(self) -> None:
         self.workers = [
             [Slot(worker=w, index=i, initial=m, current=m,
-                  steps_left=self.cfg.max_steps)
+                  steps_left=self.cfg.max_steps,
+                  objective=self.worker_objectives[w])
              for i, m in enumerate(ms)]
             for w, ms in enumerate(self.worker_initials)
         ]
@@ -649,14 +684,116 @@ class RolloutEngine:
                         action="quarantined")
             return props
 
-    def _apply_step(self, chosen, props, reward_cfg: RewardConfig,
+    def _resolve_objective(self, obj, worker: int):
+        """Normalise a slot/fleet objective to what the reward layer
+        evaluates: ``RewardConfig`` and callables (compiled objectives
+        included) pass through; a raw ``ObjectiveSpec`` or a scenario
+        registry NAME compiles lazily, memoised PER WORKER so the novelty
+        term's visit counts persist across steps without leaking between
+        workers."""
+        if obj is None or isinstance(obj, (RewardConfig, CompiledObjective)):
+            return obj
+        if isinstance(obj, ObjectiveSpec) or isinstance(obj, str):
+            key = (worker, obj)
+            hit = self._compiled_objectives.get(key)
+            if hit is None:
+                spec = obj
+                if isinstance(obj, str):
+                    from repro.configs.scenarios import get_scenario
+                    spec = get_scenario(obj)
+                hit = spec.compile()
+                self._compiled_objectives[key] = hit
+            return hit
+        return obj
+
+    def _reward_or_fault(self, obj, pr, initial, current, steps_left: int,
+                         s: Slot):
+        """One row through an arbitrary objective, isolated: a raising
+        objective yields the ``_REWARD_FAULT`` marker plus a structured
+        Incident instead of crashing the fleet (the slot quarantines in
+        ``_apply_step``)."""
+        try:
+            return float(obj(pr, initial, current, steps_left))
+        except Exception as e:  # noqa: BLE001 - user objectives raise anything
+            self._record_incident(
+                site="reward", worker=s.worker, slot=s.index,
+                key=current.canonical_key(), error=repr(e),
+                action="quarantined")
+            return _REWARD_FAULT
+
+    def _fleet_rewards(self, chosen, props, reward_cfg) -> list:
+        """THE fleet-vectorized reward layer: one NumPy evaluation over
+        the step's ``[W]`` property/state rows per distinct objective.
+
+        Rows whose property row is ``None`` (terminal predict fault) are
+        masked out — their slots quarantine in ``_apply_step``.  The
+        remaining rows group by their RESOLVED objective (the slot's own
+        ``Slot.objective`` wins over the fleet-wide ``reward_cfg``): a
+        homogeneous fleet is exactly ONE ``evaluate_rewards`` call, a
+        mixed fleet one vectorized call per scenario.  Per-group inputs
+        keep the reference worker-major row order, so the stateful
+        novelty term sees the same visit sequence as the scalar path.
+
+        Returns one entry per chosen row: a float reward, ``None`` for a
+        masked predict-fault row, or ``_REWARD_FAULT`` when the objective
+        itself raised (satellite of the self-healing contract: a broken
+        CUSTOM objective quarantines its slot, never the fleet)."""
+        rewards: list = [None] * len(chosen)
+        groups: dict[int, tuple[object, list[int]]] = {}
+        for i, ((s, _act, _fp), pr) in enumerate(zip(chosen, props, strict=True)):
+            if pr is None:
+                continue
+            obj = self._resolve_objective(
+                s.objective if s.objective is not None else reward_cfg,
+                s.worker)
+            groups.setdefault(id(obj), (obj, []))[1].append(i)
+        for obj, idx in groups.values():
+            rows = [chosen[i] for i in idx]
+            prs = [props[i] for i in idx]
+            initials = [s.initial for s, _, _ in rows]
+            # the reward sees the POST-step state: the chosen successor and
+            # the decremented step budget (Action.result is memoised — this
+            # is the very molecule _apply_step installs as s.current)
+            currents = [a.result for _, a, _ in rows]
+            sls = [s.steps_left - 1 for s, _, _ in rows]
+            if isinstance(obj, RewardConfig):
+                vals = evaluate_rewards(obj, prs, initials, currents, sls)
+                for k, i in enumerate(idx):
+                    rewards[i] = float(vals[k])
+            elif isinstance(obj, CompiledObjective):
+                try:
+                    vals = obj.evaluate(prs, initials, currents, sls)
+                except Exception:  # noqa: BLE001 - isolate the poisoned row
+                    # re-run per row against consistent state (evaluate
+                    # mutates nothing on a raise): only the poisoned rows
+                    # quarantine, their group neighbours keep rewards
+                    for k, i in enumerate(idx):
+                        rewards[i] = self._reward_or_fault(
+                            obj, prs[k], initials[k], currents[k], sls[k],
+                            rows[k][0])
+                else:
+                    for k, i in enumerate(idx):
+                        rewards[i] = float(vals[k])
+            else:
+                # arbitrary callable objective: per-row, isolated
+                for k, i in enumerate(idx):
+                    rewards[i] = self._reward_or_fault(
+                        obj, prs[k], initials[k], currents[k], sls[k],
+                        rows[k][0])
+        return rewards
+
+    def _apply_step(self, chosen, props, reward_cfg,
                     buffers) -> list[StepRecord]:
         """Commit the chosen actions: rewards, transitions, slot advance.
         A ``None`` property row (terminal predict fault, isolated by
         ``_predict_chosen``) quarantines its slot: no transition, no step
-        record, episode over — revived at the next reset."""
+        record, episode over — revived at the next reset.  A
+        ``_REWARD_FAULT`` row (the slot's objective raised inside the
+        fleet reward layer) quarantines identically, with its
+        ``site="reward"`` Incident already on the trail."""
         records: list[StepRecord] = []
-        for (s, act, fp), pr in zip(chosen, props, strict=True):
+        rewards = self._fleet_rewards(chosen, props, reward_cfg)
+        for (s, act, fp), pr, reward in zip(chosen, props, rewards, strict=True):
             if pr is None:
                 # the pending (if any) was already flushed at _begin_step,
                 # so draining here loses no committed transition
@@ -664,21 +801,14 @@ class RolloutEngine:
                 with self._stats_lock:
                     self.n_quarantined += 1
                 continue
+            if reward is _REWARD_FAULT:
+                s.steps_left = 0
+                with self._stats_lock:
+                    self.n_quarantined += 1
+                continue
             s.current = act.result
             s.steps_left -= 1
             done = s.steps_left <= 0
-            # per-slot objective (a serving request's reward config) wins
-            # over the fleet-wide one — co-batched requests may optimise
-            # different objectives without perturbing each other
-            rc = s.objective if s.objective is not None else reward_cfg
-            if callable(rc):
-                # pluggable objective (e.g. QED / PlogP, Appendix D)
-                reward = rc(pr, s.initial, s.current, s.steps_left)
-            else:
-                reward = compute_reward(
-                    rc, bde=pr.bde, ip=pr.ip,
-                    initial=s.initial, current=s.current, steps_left=s.steps_left,
-                )
             if s.best is None or reward > s.best[0]:
                 s.best = (reward, s.current)
             t = Transition(
@@ -722,7 +852,7 @@ class RolloutEngine:
         self,
         policy,
         service,
-        reward_cfg: RewardConfig,
+        reward_cfg: "RewardConfig | ObjectiveSpec | object",
         buffers: Sequence[ReplayBuffer | None] | None = None,
     ) -> list[StepRecord]:
         """One lockstep step for every live slot of every worker.
@@ -793,7 +923,7 @@ class RolloutEngine:
         self,
         policy,
         service,
-        reward_cfg: RewardConfig,
+        reward_cfg: "RewardConfig | ObjectiveSpec | object",
         buffers: Sequence[ReplayBuffer | None] | None = None,
     ) -> list[StepRecord]:
         """``step()`` with the host/device overlap: after action selection,
@@ -861,7 +991,7 @@ class RolloutEngine:
         self,
         policy,
         service,
-        reward_cfg: RewardConfig,
+        reward_cfg: "RewardConfig | ObjectiveSpec | object",
         buffers: Sequence[ReplayBuffer | None] | None = None,
         pipelined: bool = False,
     ) -> list[StepRecord]:

@@ -54,6 +54,11 @@ def main() -> None:
                          "(default: fixed train-split batch)")
     ap.add_argument("--dataset-size", type=int, default=None,
                     help="dataset pool size (default: the dataset's own)")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma list of scenario-registry names cycled "
+                         "across workers (configs/scenarios.py), e.g. "
+                         "'antioxidant,qed'; default: the Eq. 1 "
+                         "antioxidant objective on every worker")
     ap.add_argument("--ckpt-dir", default=".cache/rl_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=5,
                     help="full trainer-state checkpoint every N episodes "
@@ -108,6 +113,8 @@ def train_rl(args) -> None:
         learner=args.learner, replay=args.replay,
         priority_alpha=args.priority_alpha, priority_beta0=args.priority_beta0,
         dataset=args.dataset, dataset_size=args.dataset_size,
+        scenarios=(tuple(args.scenarios.split(","))
+                   if args.scenarios else None),
         dqn=DQNConfig(epsilon_decay=0.97))
     trainer = DistributedTrainer(cfg, molecules, service, rcfg,
                                  dataset_pool=dataset_pool)

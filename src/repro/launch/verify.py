@@ -178,6 +178,8 @@ def run_scenario(args) -> dict:
         priority_alpha=args.priority_alpha, priority_beta0=args.priority_beta0,
         updates_per_episode=args.updates_per_episode,
         train_batch_size=args.batch_size, max_candidates=args.max_candidates,
+        scenarios=(tuple(args.scenarios.split(","))
+                   if args.scenarios else None),
         dqn=DQNConfig(epsilon_decay=args.epsilon_decay),
         env=EnvConfig(max_steps=args.max_steps), seed=args.seed)
     need = args.workers * args.mols_per_worker
@@ -292,6 +294,12 @@ def main() -> None:
                     help="replay sampling (core.REPLAY_MODES); prioritized "
                          "with --priority-alpha 0 must match uniform bit "
                          "for bit — the parity scenarios pin exactly that")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma list of scenario-registry names cycled "
+                         "across workers (configs/scenarios.py); "
+                         "homogeneous 'antioxidant' must be bit-identical "
+                         "to the default path, and each mixed-fleet "
+                         "worker to its solo single-scenario twin")
     ap.add_argument("--priority-alpha", type=float, default=0.6)
     ap.add_argument("--priority-beta0", type=float, default=0.4)
     ap.add_argument("--sync", default="episode")

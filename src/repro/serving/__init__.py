@@ -9,7 +9,8 @@ statuses for every request.
 
 from repro.serving.admission import SHED_POLICIES, AdmissionQueue
 from repro.serving.breaker import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
-from repro.serving.request import (OBJECTIVES, STATUSES, OptimizeRequest,
+from repro.configs.scenarios import list_scenarios
+from repro.serving.request import (STATUSES, OptimizeRequest,
                                    RequestResult, resolve_objective)
 from repro.serving.service import (MoleculeOptService, ServeConfig, StepClock)
 from repro.serving.stream import (DEFAULT_POOL, INVALID_SMILES, StreamConfig,
@@ -19,8 +20,8 @@ from repro.serving.stream import (DEFAULT_POOL, INVALID_SMILES, StreamConfig,
 __all__ = [
     "AdmissionQueue", "SHED_POLICIES",
     "CircuitBreaker", "CLOSED", "OPEN", "HALF_OPEN",
-    "OptimizeRequest", "RequestResult", "STATUSES", "OBJECTIVES",
-    "resolve_objective",
+    "OptimizeRequest", "RequestResult", "STATUSES",
+    "resolve_objective", "list_scenarios",
     "MoleculeOptService", "ServeConfig", "StepClock",
     "StreamConfig", "seeded_request_stream", "drive_open_loop",
     "latency_stats", "DEFAULT_POOL", "INVALID_SMILES",

@@ -30,37 +30,35 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.reward import RewardConfig
+from repro.core.reward import ObjectiveSpec, RewardConfig
 
 STATUSES = ("completed", "degraded", "deadline_exceeded", "shed", "failed")
 
-# named objectives a request may ask for (Mol-AIR-style per-request
-# objective selection); values are RewardConfig instances resolved at
-# admission and installed on the slot (Slot.objective)
-OBJECTIVES: dict[str, RewardConfig] = {
-    "antioxidant": RewardConfig(),                            # paper default
-    "antioxidant_bde": RewardConfig(bde_weight=1.0, ip_weight=0.0),
-    "antioxidant_ip": RewardConfig(bde_weight=0.0, ip_weight=1.0),
-}
-
 
 def resolve_objective(objective) -> object:
-    """Map a request's objective field to what the engine consumes: a
-    named entry of :data:`OBJECTIVES`, a ``RewardConfig``, or a callable
-    ``(props, initial, current, steps_left) -> float``.  Raises
-    ``ValueError`` on anything else — caught at submit time, where it
-    turns into a ``failed`` status instead of a crashed server."""
+    """Map a request's objective field to what the engine consumes.
+
+    Named objectives resolve through THE scenario registry
+    (:mod:`repro.configs.scenarios`) — the same table the trainer mixes
+    per worker, so every trainable scenario (``antioxidant``, ``qed``,
+    ``plogp``, ...) is requestable (Mol-AIR-style per-request objective
+    selection, arXiv 2403.20109).  A name or an ``ObjectiveSpec`` is
+    compiled FRESH per request (a novelty term's visit counts are
+    request-private state); a ``RewardConfig`` or a callable
+    ``(props, initial, current, steps_left) -> float`` passes through
+    untouched.  Raises ``ValueError`` on anything else — caught at
+    submit time, where it turns into a ``failed`` status whose message
+    lists the registry names, instead of a crashed server."""
+    if isinstance(objective, ObjectiveSpec):
+        return objective.compile()
     if isinstance(objective, RewardConfig) or callable(objective):
         return objective
     if isinstance(objective, str):
-        try:
-            return OBJECTIVES[objective]
-        except KeyError:
-            raise ValueError(
-                f"unknown objective {objective!r}; named objectives: "
-                f"{sorted(OBJECTIVES)}") from None
-    raise ValueError(f"objective must be a name, RewardConfig, or callable, "
-                     f"got {type(objective).__name__}")
+        from repro.configs.scenarios import get_scenario
+        return get_scenario(objective).compile()
+    raise ValueError(
+        f"objective must be a scenario name, ObjectiveSpec, RewardConfig, "
+        f"or callable, got {type(objective).__name__}")
 
 
 @dataclass(frozen=True)

@@ -10,7 +10,10 @@ one property batch — over whatever request mix is currently bound.
 Continuous batching: a finished / quarantined / deadline-reclaimed slot
 is rebound to the next queued request the very next service step
 (``RolloutEngine.bind_slot``), while its co-batched neighbours keep
-stepping undisturbed.  The dense Q batch keeps ONE compiled shape
+stepping undisturbed.  Request objectives resolve through THE scenario
+registry (``configs/scenarios.py``) at the door — the same table the
+trainer mixes per worker — so the in-flight mix is a heterogeneous
+objective fleet exactly like a ``TrainerConfig.scenarios`` run.  The dense Q batch keeps ONE compiled shape
 ``[W, C_cap, STATE_DIM]`` via the sticky capacity-ladder buffer, so a
 churning request mix causes 0 XLA recompiles after warmup.
 

@@ -1,0 +1,67 @@
+"""Mixed-scenario fleets at mesh scale: the PR-10 determinism gates.
+
+Three contracts, each pinned through ``repro.launch.verify`` children
+(the XLA_FLAGS-before-jax-init constraint; see mdhelpers):
+
+* a homogeneous ``--scenarios antioxidant`` fleet — the registry spec
+  compiled per worker — is BIT-identical (transitions, losses, rewards,
+  params) to the default scalar Eq. 1 path, at nd in {1, 2, 4}, with the
+  recompiles-after-warmup gate held at 0 (the vectorized reward layer is
+  NumPy-side: it must never touch XLA shapes);
+* a heterogeneous scenario mix is its own cross-nd equivalence class:
+  nd in {2, 4} reproduce its nd = 1 reference exactly;
+* each worker of a mixed fleet reproduces the per-worker transition
+  digest of the homogeneous fleet running only its scenario (updates
+  off, so param sync — the one legitimate cross-worker coupling — is
+  out of the picture and any divergence is a reward-layer leak).
+"""
+
+import pytest
+
+from mdhelpers import assert_equivalent, run_cells
+
+MIX = "antioxidant,qed,plogp,antioxidant_novel"
+
+
+def test_homogeneous_antioxidant_scenario_matches_default_across_nd(tmp_path):
+    base_dir, scen_dir = tmp_path / "default", tmp_path / "scenario"
+    base_dir.mkdir()
+    scen_dir.mkdir()
+    base = run_cells(base_dir, (1,))
+    scen = run_cells(scen_dir, (1, 2, 4), scenarios="antioxidant")
+    for nd in (1, 2, 4):
+        assert int(scen[nd]["recompiles_after_warmup"]) == 0, \
+            f"scenario fleet nd={nd} recompiled after warmup"
+        assert_equivalent(base[1], scen[nd],
+                          f"scenarios=antioxidant nd={nd} vs default nd=1")
+
+
+def test_mixed_scenario_fleet_identical_across_nd(tmp_path):
+    res = run_cells(tmp_path, (1, 2, 4), scenarios=MIX)
+    for nd in (2, 4):
+        assert int(res[nd]["n_devices"]) == nd
+        assert int(res[nd]["recompiles_after_warmup"]) == 0, \
+            f"mixed fleet nd={nd} recompiled after warmup"
+        assert_equivalent(res[1], res[nd], f"scenarios={MIX} nd={nd}")
+
+
+@pytest.mark.parametrize("nd", [1, 4])
+def test_mixed_fleet_worker_matches_solo_twin(tmp_path, nd):
+    """W=4, mix 'antioxidant,qed' cycled w%2: workers 0/2 must carry the
+    exact transition digests of the all-antioxidant fleet's workers 0/2,
+    workers 1/3 those of the all-qed fleet's workers 1/3."""
+    runs = {}
+    for tag, scen in (("mixed", "antioxidant,qed"),
+                      ("anti", "antioxidant"), ("qed", "qed")):
+        d = tmp_path / f"{tag}-nd{nd}"
+        d.mkdir()
+        runs[tag] = run_cells(d, (nd,), scenarios=scen,
+                              updates_per_episode=0)[nd]
+    digests = {t: list(r["transition_digests"]) for t, r in runs.items()}
+    counts = {t: list(r["n_transitions"]) for t, r in runs.items()}
+    assert len(digests["mixed"]) == 4
+    for w in range(4):
+        twin = "anti" if w % 2 == 0 else "qed"
+        assert digests["mixed"][w] == digests[twin][w], \
+            f"nd={nd} worker {w} diverged from its solo {twin} twin"
+        assert counts["mixed"][w] == counts[twin][w]

@@ -326,6 +326,59 @@ def test_multi_slot_same_step_incident_order_and_revival():
          for s in range(tr.cfg.mols_per_worker)] * 2)
 
 
+# ------------------------------------------------------------------ #
+# reward-site faults: a raising objective quarantines ITS slot, not the
+# fleet (pre-PR-10 a custom objective's exception escaped _apply_step
+# and crashed every worker)
+# ------------------------------------------------------------------ #
+def _ok_objective(props, initial, current, steps_left):
+    return 0.01 * current.num_atoms + 0.1 * steps_left
+
+
+def _boom_objective(props, initial, current, steps_left):
+    raise RuntimeError("objective exploded")
+
+
+def test_raising_objective_quarantines_slot_not_fleet():
+    """Worker 1 runs an objective that raises on every evaluation: its
+    slots drain with structured ``site="reward"`` incidents, the run
+    completes, worker 0's replay is bit-identical to an all-ok fleet's,
+    and reset() revives worker 1 next episode (it re-quarantines — proof
+    the slots came back)."""
+    tr = _trainer()
+    tr.engine.set_worker_objectives([_ok_objective, _boom_objective])
+    tr.train(2)                                      # no crash
+    st = tr.engine.fault_stats()
+    # both of worker 1's slots die at step one of BOTH episodes (revival)
+    assert st["n_quarantined"] == 2 * tr.cfg.mols_per_worker
+    assert all(i["site"] == "reward" and i["action"] == "quarantined"
+               and i["worker"] == 1 for i in st["incidents"])
+    assert all("objective exploded" in i["error"] for i in st["incidents"])
+    assert all(i["key"] for i in st["incidents"])    # molecule attribution
+    assert {i["episode"] for i in st["incidents"]} == {1, 2}
+    assert len(tr.buffers[1]) == 0                   # nothing half-committed
+
+    ref = _trainer()
+    ref.engine.set_worker_objectives([_ok_objective, _ok_objective])
+    ref.train(2)
+    assert ref.engine.fault_stats()["n_quarantined"] == 0
+
+    def txns(buf):
+        return [(t.state_fp.tobytes(), t.steps_left_frac, t.reward, t.done,
+                 t.next_fps.tobytes(), t.next_steps_left_frac)
+                for t in buf._items]
+
+    # quarantine is not contagious: worker 0's transition stream is
+    # bit-identical to the all-ok run's
+    assert txns(tr.buffers[0]) and txns(tr.buffers[0]) == txns(ref.buffers[0])
+
+
+def test_set_worker_objectives_validates_length():
+    tr = _trainer()
+    with pytest.raises(ValueError, match="objectives"):
+        tr.engine.set_worker_objectives([_ok_objective])
+
+
 def test_incident_trail_deterministic_across_runs():
     """The full incident trail (site/worker/slot/key/action per episode
     and step) is a pure function of the seeded plan — two identical runs

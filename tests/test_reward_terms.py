@@ -1,0 +1,204 @@
+"""Objective layer: term composition, the scenario registry, and the
+bit-identity contract between the scalar reference (``compute_reward``)
+and the fleet-vectorized paths (``evaluate_rewards`` / compiled specs)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.chem.properties import penalized_logp, qed_score, sa_score, tanimoto
+from repro.chem.smiles import from_smiles
+from repro.configs.scenarios import (
+    SCENARIOS, compile_worker_objectives, get_scenario, list_scenarios,
+    register_scenario, worker_scenarios,
+)
+from repro.core.reward import (
+    CompiledObjective, INVALID_CONFORMER_REWARD, ObjectiveSpec, RewardConfig,
+    TermSpec, compute_reward, evaluate_rewards,
+)
+from repro.predictors.service import Properties
+
+PHENOL = from_smiles("C1=CC=CC=C1O")
+CATECHOL = from_smiles("OC1=CC=CC=C1O")
+BHT = from_smiles("CC1=CC(C)=CC(C)=C1O")
+CRESOL = from_smiles("CC1=CC=C(O)C=C1")
+
+MOLS = [PHENOL, CATECHOL, BHT, CRESOL]
+
+
+def _rows(n=16, seed=0, invalid_every=5):
+    """Random (props, initials, currents, steps_left) rows incl. invalid
+    conformers."""
+    rng = np.random.default_rng(seed)
+    props, initials, currents, sls = [], [], [], []
+    for i in range(n):
+        if invalid_every and i % invalid_every == invalid_every - 1:
+            props.append(Properties(bde=float(rng.uniform(55, 95)), ip=None))
+        else:
+            props.append(Properties(bde=float(rng.uniform(55, 95)),
+                                    ip=float(rng.uniform(95, 200))))
+        initials.append(MOLS[int(rng.integers(len(MOLS)))])
+        currents.append(MOLS[int(rng.integers(len(MOLS)))])
+        sls.append(int(rng.integers(0, 6)))
+    return props, initials, currents, sls
+
+
+# ------------------------------------------------------------------ #
+# evaluate_rewards == compute_reward, bit for bit
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("cfg", [
+    RewardConfig(),
+    RewardConfig(bde_min=60, bde_max=90, ip_min=100, ip_max=200),
+    RewardConfig(bde_weight=1.0, ip_weight=0.0),
+    RewardConfig(bde_weight=0.0, ip_weight=1.0, gamma_weight=0.0),
+])
+def test_evaluate_rewards_bit_identical_to_scalar_reference(cfg):
+    props, initials, currents, sls = _rows()
+    vec = evaluate_rewards(cfg, props, initials, currents, sls)
+    ref = [compute_reward(cfg, bde=p.bde, ip=p.ip, initial=m0, current=m,
+                          steps_left=s)
+           for p, m0, m, s in zip(props, initials, currents, sls)]
+    assert vec.tolist() == ref            # EXACT equality: the contract
+
+
+@pytest.mark.parametrize("name", [
+    "antioxidant", "antioxidant_bde", "antioxidant_ip"])
+def test_compiled_eq1_scenarios_bit_identical_to_scalar_reference(name):
+    # registry Eq. 1 specs defer bounds to the compile-time base config —
+    # exactly how the trainer's dataset-derived RewardConfig flows in
+    base = RewardConfig(bde_min=58.0, bde_max=93.0, ip_min=101.0, ip_max=188.0)
+    w = {"antioxidant": (0.8, 0.2), "antioxidant_bde": (1.0, 0.0),
+         "antioxidant_ip": (0.0, 1.0)}[name]
+    ref_cfg = RewardConfig(bde_weight=w[0], ip_weight=w[1],
+                           bde_min=58.0, bde_max=93.0,
+                           ip_min=101.0, ip_max=188.0)
+    obj = get_scenario(name).compile(base=base)
+    props, initials, currents, sls = _rows(seed=1)
+    vec = obj.evaluate(props, initials, currents, sls)
+    ref = [compute_reward(ref_cfg, bde=p.bde, ip=p.ip, initial=m0, current=m,
+                          steps_left=s)
+           for p, m0, m, s in zip(props, initials, currents, sls)]
+    assert vec.tolist() == ref
+    # the one-row scalar convenience (__call__, the Slot.objective form)
+    # agrees with its own vectorized path
+    assert obj(props[0], initials[0], currents[0], sls[0]) == ref[0]
+
+
+def test_from_reward_config_roundtrip():
+    cfg = RewardConfig(bde_weight=0.7, ip_weight=0.3, gamma_weight=0.4,
+                       bde_factor=0.85, ip_factor=0.75,
+                       bde_min=60, bde_max=90, ip_min=100, ip_max=200)
+    obj = ObjectiveSpec.from_reward_config("custom", cfg).compile()
+    props, initials, currents, sls = _rows(seed=2)
+    ref = [compute_reward(cfg, bde=p.bde, ip=p.ip, initial=m0, current=m,
+                          steps_left=s)
+           for p, m0, m, s in zip(props, initials, currents, sls)]
+    assert obj.evaluate(props, initials, currents, sls).tolist() == ref
+
+
+def test_invalid_conformer_guard_only_for_prop_specs():
+    bad = Properties(bde=70.0, ip=None)
+    eq1 = get_scenario("antioxidant").compile()
+    assert eq1(bad, PHENOL, PHENOL, 0) == INVALID_CONFORMER_REWARD
+    # structure-only specs never read props -> no guard, no crash
+    qed = get_scenario("qed").compile()
+    assert qed(bad, PHENOL, CATECHOL, 0) == qed_score(CATECHOL)
+
+
+# ------------------------------------------------------------------ #
+# term semantics
+# ------------------------------------------------------------------ #
+def test_structure_term_values():
+    qed = get_scenario("qed").compile()
+    plogp = get_scenario("plogp").compile()
+    qed_sa = get_scenario("qed_sa").compile()
+    p = Properties(bde=70.0, ip=150.0)
+    for m in MOLS:
+        assert qed(p, PHENOL, m, 3) == qed_score(m)
+        assert plogp(p, PHENOL, m, 3) == penalized_logp(m)
+        assert qed_sa(p, PHENOL, m, 0) == \
+            1.0 * qed_score(m) + (-0.1) * sa_score(m)
+
+
+def test_similarity_term_tethers_to_start_or_fixed_target():
+    p = Properties(bde=70.0, ip=150.0)
+    tether = ObjectiveSpec("t", (TermSpec("similarity", weight=1.0),)).compile()
+    assert tether(p, BHT, CRESOL, 0) == tanimoto(CRESOL, BHT)
+    assert tether(p, BHT, BHT, 0) == 1.0          # identical -> sim 1
+    fixed = ObjectiveSpec("f", (
+        TermSpec("similarity", weight=1.0, target="C1=CC=CC=C1O"),)).compile()
+    assert fixed(p, BHT, CRESOL, 0) == pytest.approx(
+        tanimoto(CRESOL, PHENOL))
+
+
+def test_term_decay_factor():
+    spec = ObjectiveSpec("d", (TermSpec("qed", weight=2.0, factor=0.5),))
+    obj = spec.compile()
+    p = Properties(bde=None, ip=None)   # structure-only: props unread
+    assert obj(p, PHENOL, BHT, 3) == 2.0 * (qed_score(BHT) * 0.5 ** 3)
+
+
+def test_novelty_counts_per_instance():
+    p = Properties(bde=70.0, ip=150.0)
+    spec = ObjectiveSpec("n", (TermSpec("novelty", weight=1.0),))
+    a, b = spec.compile(), spec.compile()
+    # 1/sqrt(visits) in visit order, scoped to the instance
+    assert a(p, PHENOL, BHT, 0) == 1.0
+    assert a(p, PHENOL, BHT, 0) == 1.0 / math.sqrt(2)
+    assert a(p, PHENOL, CRESOL, 0) == 1.0        # new key
+    assert b(p, PHENOL, BHT, 0) == 1.0           # fresh instance, fresh counts
+
+
+def test_novelty_state_dict_roundtrip():
+    p = Properties(bde=70.0, ip=150.0)
+    spec = get_scenario("antioxidant_novel")
+    a = spec.compile()
+    for m in (BHT, BHT, CRESOL):
+        a(p, PHENOL, m, 0)
+    b = spec.compile()
+    b.load_state_dict(a.state_dict())
+    # restored counts continue the SAME visit sequence
+    assert b(p, PHENOL, BHT, 1) == a(p, PHENOL, BHT, 1)
+    # stateless specs expose (and accept) None
+    s = get_scenario("qed").compile()
+    assert s.state_dict() == {"novelty_counts": None}
+    s.load_state_dict({"novelty_counts": None})
+    with pytest.raises(ValueError, match="mismatch"):
+        s.load_state_dict({"novelty_counts": {"k": 1}})
+
+
+# ------------------------------------------------------------------ #
+# spec validation + registry
+# ------------------------------------------------------------------ #
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown reward term"):
+        TermSpec("bde_squared")
+    with pytest.raises(ValueError, match="no terms"):
+        ObjectiveSpec("empty", ())
+
+
+def test_registry_resolution_and_rejects():
+    assert "antioxidant" in list_scenarios()
+    assert "qed" in list_scenarios() and "plogp" in list_scenarios()
+    assert get_scenario("antioxidant") is SCENARIOS["antioxidant"]
+    with pytest.raises(ValueError, match="registry scenarios"):
+        get_scenario("make_it_sticky")
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario(ObjectiveSpec("qed", (TermSpec("qed"),)))
+
+
+def test_worker_scenarios_cycle_and_validate():
+    assert worker_scenarios(["antioxidant", "qed"], 5) == \
+        ["antioxidant", "qed", "antioxidant", "qed", "antioxidant"]
+    with pytest.raises(ValueError):
+        worker_scenarios([], 4)
+    with pytest.raises(ValueError, match="registry scenarios"):
+        worker_scenarios(["antioxidant", "nope"], 4)
+
+
+def test_compile_worker_objectives_fresh_instances():
+    objs = compile_worker_objectives(["antioxidant_novel"], 3)
+    assert len(objs) == 3
+    assert len({id(o) for o in objs}) == 3       # never shared (novelty state)
+    assert all(isinstance(o, CompiledObjective) for o in objs)

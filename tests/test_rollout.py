@@ -47,15 +47,19 @@ def _transitions(buf: ReplayBuffer):
 # the equivalence matrix: every rollout mode == sequential reference
 # ------------------------------------------------------------------ #
 def _matrix_trainer(rollout: str, sync_mode: str, W: int, seed: int,
-                    chem: str = "full", acting: str = "packed"
-                    ) -> DistributedTrainer:
+                    chem: str = "full", acting: str = "packed",
+                    scenarios=None, reward_cfg=None,
+                    updates_per_episode: int = 1) -> DistributedTrainer:
     cfg = TrainerConfig(
         n_workers=W, mols_per_worker=1, episodes=2, sync_mode=sync_mode,
-        rollout=rollout, chem=chem, acting=acting, updates_per_episode=1,
+        rollout=rollout, chem=chem, acting=acting,
+        updates_per_episode=updates_per_episode,
         train_batch_size=3, max_candidates=16, dqn=DQNConfig(epsilon_decay=0.9),
-        env=EnvConfig(max_steps=3), seed=seed)
+        env=EnvConfig(max_steps=3), seed=seed, scenarios=scenarios)
     mols = (MOLS * ((W + len(MOLS) - 1) // len(MOLS)))[:W]
-    return DistributedTrainer(cfg, mols, _OracleService(), RewardConfig(),
+    return DistributedTrainer(cfg, mols, _OracleService(),
+                              reward_cfg if reward_cfg is not None
+                              else RewardConfig(),
                               network=QNetwork(hidden=(32,)))
 
 
@@ -103,6 +107,94 @@ if HAVE_HYPOTHESIS:
 else:
     def test_rollout_mode_matrix_property():
         pytest.importorskip("hypothesis")
+
+
+# ------------------------------------------------------------------ #
+# the objective axis: scenario mixes and raw callables through every
+# rollout mode (the fleet-vectorized reward layer vs the per-worker
+# scalar reference)
+# ------------------------------------------------------------------ #
+SCENARIO_MIX = ("antioxidant", "qed", "antioxidant_novel", "plogp")
+
+
+def _custom_objective(props, initial, current, steps_left):
+    """A raw pluggable objective (the serving-style callable contract)."""
+    if props.bde is None or props.ip is None:
+        return -5.0
+    return 0.01 * (props.ip - props.bde) + 0.05 * steps_left \
+        + 0.001 * current.num_atoms
+
+
+@pytest.mark.parametrize("sync_mode", ["episode", "step"])
+@pytest.mark.parametrize("objective", ["mix", "callable"])
+def test_objective_axis_matrix(objective, sync_mode):
+    """Every rollout mode must produce the per_worker reference's exact
+    transition stream under (a) a heterogeneous scenario mix — including
+    the stateful novelty scenario — and (b) a raw callable objective.
+    Worker-major row order in the fleet reward layer is what keeps the
+    novelty visit sequence identical across modes."""
+    kw = ({"scenarios": SCENARIO_MIX} if objective == "mix"
+          else {"reward_cfg": _custom_objective})
+    streams, params, losses = {}, {}, {}
+    for mode in ROLLOUT_MODES:
+        tr = _matrix_trainer(mode, sync_mode, 4, seed=5, chem="incremental",
+                             **kw)
+        st = [tr.train_episode() for _ in range(2)]
+        streams[mode] = [_transitions(b) for b in tr.buffers]
+        params[mode] = [np.asarray(x)
+                        for x in jax.tree_util.tree_leaves(tr.params)]
+        losses[mode] = [s["loss"] for s in st]
+    for mode in ROLLOUT_MODES:
+        assert streams[mode] == streams["per_worker"], \
+            f"{mode}/{objective}: transition stream diverged ({sync_mode})"
+        assert losses[mode] == pytest.approx(losses["per_worker"], nan_ok=True)
+        for xm, xr in zip(params[mode], params["per_worker"]):
+            np.testing.assert_array_equal(
+                xm, xr, err_msg=f"{mode}/{objective}: params diverged")
+
+
+def test_homogeneous_scenario_fleet_bit_identical_to_default_path():
+    """THE tentpole determinism gate (single-process side; nd > 1 lives in
+    tests/multidevice/test_scenarios.py): a fleet running
+    scenarios=("antioxidant",) * W — the registry spec compiled against the
+    trainer's RewardConfig — is bit-identical to scenarios=None (the
+    pre-refactor scalar Eq. 1 path) in transitions, losses AND params."""
+    runs = {}
+    for scen in (None, ("antioxidant",) * 4):
+        tr = _matrix_trainer("fleet", "episode", 4, seed=0,
+                             chem="incremental", scenarios=scen)
+        stats = [tr.train_episode() for _ in range(2)]
+        runs[scen is None] = (
+            [_transitions(b) for b in tr.buffers],
+            [s["loss"] for s in stats],
+            [np.asarray(x) for x in jax.tree_util.tree_leaves(tr.params)])
+    assert runs[True][0] == runs[False][0]
+    assert runs[True][1] == runs[False][1]           # exact loss equality
+    for a, b in zip(runs[True][2], runs[False][2]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_mixed_fleet_worker_bit_identical_to_solo_twin():
+    """Each worker of a mixed-scenario fleet reproduces the exact per-worker
+    transition stream of a homogeneous fleet running only its scenario.
+    Updates are off (updates_per_episode=0) so workers stay decoupled —
+    with param sync on, every worker's actions legitimately depend on the
+    whole fleet's replay; without it the only cross-worker channel left
+    would be a reward-layer leak, which is what this pins against."""
+    def run(scenarios):
+        tr = _matrix_trainer("fleet", "episode", 4, seed=2,
+                             chem="incremental", scenarios=scenarios,
+                             updates_per_episode=0)
+        for _ in range(2):
+            tr.train_episode()
+        return [_transitions(b) for b in tr.buffers]
+
+    mix = ("antioxidant", "antioxidant_novel")       # cycled: w%2
+    mixed = run(mix)
+    solos = {name: run((name,)) for name in mix}
+    for w in range(4):
+        assert mixed[w] == solos[mix[w % 2]][w], \
+            f"worker {w} ({mix[w % 2]}) diverged from its solo twin"
 
 
 # ------------------------------------------------------------------ #

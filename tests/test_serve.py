@@ -102,10 +102,15 @@ def test_admission_queue_rejects_unknown_policy():
 
 
 def test_resolve_objective():
-    assert resolve_objective("antioxidant_bde").bde_weight == 1.0
+    # names resolve through THE scenario registry and compile fresh
+    # per request (request-private novelty state)
+    obj = resolve_objective("antioxidant_bde")
+    assert obj.spec.name == "antioxidant_bde"
+    assert resolve_objective("antioxidant_bde") is not obj
+    assert resolve_objective("qed").spec.name == "qed"   # non-Eq.1 preset
     fn = lambda pr, initial, current, steps_left: 0.0  # noqa: E731
     assert resolve_objective(fn) is fn
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="registry scenarios"):
         resolve_objective("make_it_sticky")
 
 
